@@ -1,0 +1,75 @@
+"""Paper Table 9 (+ Fig 12) — ablations on the Exp-C-1 configuration:
+relative iteration time of DDR vs TCP transport, HeteroPP vs uniform layer
+split, SR&AG resharding on/off, fine-grained overlap on/off — replayed
+through the tick-level 1F1B schedule simulator."""
+import dataclasses
+
+from .common import emit
+
+PAPER = {
+    "full": 100.0, "tcp": 110.1, "uniform": 126.4,
+    "no_srag": 104.8, "no_overlap": 101.8,
+}
+
+
+def main():
+    from repro.configs import get_config
+    from repro.core import chips, heteroauto, schedule as SCH
+    from repro.core.cost_model import ParallelPlan, StagePlan
+
+    cfg = get_config("h2_100b")
+    groups = chips.cluster(("A", 384), ("B", 1024))   # Exp-C-1
+    r = heteroauto.search(groups, cfg, 4 * 2 ** 20, 4096, two_stage=True)
+    plan = r.plan
+    assert plan is not None
+
+    def run(transport="device_rdma", resharding="sr_ag", overlap=True,
+            the_plan=None):
+        p = the_plan or plan
+        tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(
+            p, cfg, 4096, transport=transport, resharding=resharding)
+        return SCH.simulate_1f1b(tf, tb, b, tp2p, overlap=overlap,
+                                 t_update=tu).makespan
+
+    full = run()
+    emit("table9.full", "100.0%", f"makespan={full:.2f}s (reference)")
+    emit("table9.tcp", f"{run(transport='cpu_tcp') / full:.1%}",
+         f"paper: {PAPER['tcp']}%")
+    emit("table9.no_srag", f"{run(resharding='naive') / full:.1%}",
+         f"paper: {PAPER['no_srag']}%")
+    emit("table9.no_overlap", f"{run(overlap=False) / full:.1%}",
+         f"paper: {PAPER['no_overlap']}%")
+
+    # uniform 1F1B: what a homogeneous-style framework would do on the same
+    # chips — ONE tp everywhere, equal layers per stage, uniform recompute
+    dp = plan.dp
+    tp = 4
+    uni_stages = []
+    total_pp = sum(g.count // (tp * dp) for g in groups)
+    acc = 0
+    for i, g in enumerate(groups):
+        pp = g.count // (tp * dp)
+        layers = (cfg.num_layers * pp // total_pp) if i < len(groups) - 1 \
+            else cfg.num_layers - acc
+        acc += layers
+        uni_stages.append(StagePlan(g, tp, pp, layers, recompute=True))
+    uni = ParallelPlan(uni_stages, dp, plan.microbatches)
+    emit("table9.uniform_1f1b", f"{run(the_plan=uni) / full:.1%}",
+         f"paper: {PAPER['uniform']}% (tp=4 everywhere, equal layers/stage)")
+
+    # Fig 12: small-scale e2e DDR vs TCP (8-layer model, TP4 PP2 DP2)
+    small = dataclasses.replace(cfg, num_layers=8)
+    g2 = [chips.ChipGroup(chips.CHIPS["A"], 8), chips.ChipGroup(chips.CHIPS["C"], 8)]
+    st = [StagePlan(g2[0], 4, 1, 4, False), StagePlan(g2[1], 4, 1, 4, False)]
+    p2 = ParallelPlan(st, 2, 8)
+    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(p2, small, 4096)
+    ddr = SCH.simulate_1f1b(tf, tb, b, tp2p, t_update=tu).makespan
+    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(
+        p2, small, 4096, transport="cpu_tcp")
+    tcp = SCH.simulate_1f1b(tf, tb, b, tp2p, t_update=tu).makespan
+    emit("fig12.small_scale_ddr_speedup", f"{tcp / ddr:.3f}x",
+         "DDR vs CPU-mediated TCP, 8-layer model, TP4 PP2 DP2")
+
+
+if __name__ == "__main__":
+    main()

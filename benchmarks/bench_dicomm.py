@@ -1,0 +1,28 @@
+"""Paper Fig 7 + Table 3 — DiComm P2P latency and NIC affinity."""
+from .common import emit
+
+
+def main():
+    from repro.comm import latency as L
+
+    s = L.fig7_speedups()
+    emit("fig7.avg_speedup_ddr_vs_tcp", f"{L.fig7_average_speedup():.2f}",
+         "paper: 9.94x avg (size-set weighting differs; see EXPERIMENTS.md)")
+    emit("fig7.min_speedup", f"{min(s.values()):.2f}", "paper: 1.79x")
+    emit("fig7.max_speedup", f"{max(s.values()):.2f}", "paper: 16.0x")
+    for n in (1 << 16, 1 << 20, 1 << 24, 1 << 28):
+        emit(f"fig7.latency_us.tcp.{n}",
+             f"{L.p2p_latency('cpu_tcp', n) * 1e6:.1f}")
+        emit(f"fig7.latency_us.ddr.{n}",
+             f"{L.p2p_latency('device_rdma', n) * 1e6:.1f}")
+
+    aff = L.affinity_throughput() / 1e9
+    non = L.non_affinity_throughput() / 1e9
+    emit("table3.affinity_GBps", f"{aff:.2f}", "paper: 9.56 / 9.91")
+    emit("table3.non_affinity_GBps", f"{non:.2f}", "paper: 5.51 / 5.23")
+    emit("table3.improvement", f"{(aff - non) / non:.1%}",
+         "paper: 73.5% / 89.5%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 7 / Fig 11 — HeteroPP + HeteroAuto on Exp-A..Exp-D clusters:
+throughput and HeteroSpeedupRatio vs the Table 6 homogeneous baselines."""
+from .common import emit
+
+PAPER_RATIOS = {  # Fig 11 (percent)
+    "Exp-A-1": 89.56, "Exp-A-2": 109.03,
+    "Exp-B-1": 77.45, "Exp-B-2": 104.29,
+}
+
+
+def main():
+    from repro.configs import get_config
+    from repro.core import chips, heteroauto
+
+    cfg = get_config("h2_100b")
+    base = {}
+    for name, t6 in chips.TABLE6.items():
+        g = chips.ChipGroup(chips.CHIPS[name], 256)
+        base[name] = heteroauto.homogeneous_baseline(
+            g, cfg, 2 * 2 ** 20, 4096,
+            fixed={"dp": t6["dp"], "tp": t6["tp"],
+                   "recompute": t6["recompute"]},
+            allow_offload=True)
+
+    for exp, spec in chips.EXPERIMENTS.items():
+        groups = chips.cluster(*spec["groups"])
+        r = heteroauto.search(groups, cfg, spec["gbs_tokens"], 4096,
+                              two_stage=True)
+        if r.plan is None:
+            emit(f"fig11.{exp}.ratio", "infeasible")
+            continue
+        bl = [(g, base[g.spec.name]) for g in groups]
+        ratio = heteroauto.hetero_speedup_ratio(r, bl)
+        paper = PAPER_RATIOS.get(exp)
+        emit(f"fig11.{exp}.hetero_tgs", f"{r.tgs:.1f}",
+             r.plan.describe()[:120])
+        emit(f"fig11.{exp}.speedup_ratio", f"{ratio:.2%}",
+             f"paper: {paper}%" if paper else "superlinear check")
+        emit(f"table8.search_time_s.{exp}", f"{r.search_time_s:.2f}",
+             f"paper: 0.62-12.29s for up to 2432 chips; evaluated={r.evaluated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table 6 — homogeneous 100B training TGS per chip type (256 chips,
+GBS 2M tokens), under the paper's pinned hybrid-parallelism configs."""
+from .common import emit
+
+
+def main():
+    from repro.configs import get_config
+    from repro.core import chips, heteroauto
+
+    cfg = get_config("h2_100b")
+    for name, t6 in chips.TABLE6.items():
+        g = chips.ChipGroup(chips.CHIPS[name], 256)
+        r = heteroauto.homogeneous_baseline(
+            g, cfg, 2 * 2 ** 20, 4096,
+            fixed={"dp": t6["dp"], "tp": t6["tp"],
+                   "recompute": t6["recompute"]},
+            allow_offload=True)
+        emit(f"table6.tgs.chip_{name}", f"{r.tgs:.1f}",
+             f"paper: {t6['tgs']} (pp={t6['pp']} dp={t6['dp']} tp={t6['tp']})")
+        # free search: what HeteroAuto would pick for one chip type
+        rf = heteroauto.homogeneous_baseline(g, cfg, 2 * 2 ** 20, 4096,
+                                             allow_offload=True)
+        emit(f"table6.free_search.chip_{name}", f"{rf.tgs:.1f}",
+             rf.plan.describe() if rf.plan else "infeasible")
+
+
+if __name__ == "__main__":
+    main()

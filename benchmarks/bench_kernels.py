@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference wall time on
+CPU is meaningless for TPU perf, so this reports the *structural* numbers
+that matter for the VMEM/roofline story (tile sizes, VMEM working set,
+arithmetic intensity) plus a correctness spot-check per kernel."""
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+
+def main():
+    from repro.kernels import ref as R
+    from repro.kernels.flash_attention import (DEFAULT_BLOCK_K,
+                                               DEFAULT_BLOCK_Q,
+                                               flash_attention)
+    from repro.kernels.ssd_scan import ssd_scan
+
+    hd = 128
+    bq, bk = DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+    vmem = (bq * hd + 2 * bk * hd + bq * hd + 2 * bq) * 4
+    emit("kernel.flash_attention.vmem_bytes", vmem,
+         f"blocks q={bq} k={bk} hd={hd} (fits 16MiB VMEM: {vmem < 16 << 20})")
+    # arithmetic intensity per (q,k) tile: 2*bq*bk*hd flops / tile bytes
+    ai = (4 * bq * bk * hd) / ((bq * hd + 2 * bk * hd) * 2)
+    emit("kernel.flash_attention.arith_intensity", f"{ai:.0f}",
+         "flops/byte at bf16 — MXU-bound above ~240")
+
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (1, 256, 2, 64)) for kk in
+               jax.random.split(key, 3))
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v, block_q=64, block_k=64) -
+        R.attention_ref(q, k, v))))
+    emit("kernel.flash_attention.max_err_vs_ref", f"{err:.2e}", "interpret")
+
+    chunk, p, n = 128, 64, 128
+    vmem_ssd = (chunk * p + 2 * chunk * n + chunk * chunk + p * n) * 4
+    emit("kernel.ssd_scan.vmem_bytes", vmem_ssd,
+         f"chunk={chunk} p={p} n={n} (fits VMEM: {vmem_ssd < 16 << 20})")
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, 256, 2, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 2))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, 256, 1, 16)) * 0.3
+    Cm = jax.random.normal(ks[4], (1, 256, 1, 16)) * 0.3
+    y, f = ssd_scan(x, dt, A, Bm, Cm, chunk=64)
+    yr, fr = R.ssd_ref(x, dt, A, Bm, Cm)
+    emit("kernel.ssd_scan.max_err_vs_ref",
+         f"{float(jnp.max(jnp.abs(y - yr))):.2e}", "interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Shared helpers for the benchmark suite: CSV emission + paper targets."""
+import time
+from contextlib import contextmanager
+
+ROWS = []
+
+
+def emit(name: str, value, derived: str = ""):
+    """Print one CSV row: name,us_per_call_or_value,derived."""
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}", flush=True)
+
+
+@contextmanager
+def timed(name: str, derived: str = ""):
+    t0 = time.perf_counter()
+    yield
+    emit(name, round((time.perf_counter() - t0) * 1e6, 1), derived)

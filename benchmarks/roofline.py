@@ -1,0 +1,133 @@
+"""Roofline analysis (assignment deliverable g).
+
+Reads the dry-run artifacts (trip-count-correct per-device FLOPs / HBM-proxy
+bytes / collective bytes from ``repro.launch.hlo_analysis``) and derives the
+three roofline terms per (arch × input shape) on the single-pod 16×16 mesh:
+
+    compute    = flops_per_chip / PEAK_FLOPS_BF16
+    memory     = bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / ICI_BW
+
+plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs.  Emits CSV + a markdown table consumed by
+EXPERIMENTS.md §Roofline.
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def suggest(dom, rec, cfg, shape):
+    if dom == "collective":
+        return ("reduce TP all-reduces: reduce-scatter/seq-parallel layouts, "
+                "bf16 comms, or all-to-all MoE dispatch")
+    if dom == "memory":
+        if shape.kind == "decode":
+            return ("decode is KV/state-bandwidth bound: quantized cache or "
+                    "larger per-step batch amortizes weight reads")
+        return "fuse/rematerialize to cut HBM round-trips (chunked loss/attn)"
+    return "compute-bound: good — push MXU utilization via kernel fusion"
+
+
+def rows(art_dir="artifacts/dryrun", mesh="pod16x16"):
+    from repro.configs import get_config
+    from repro.launch import shapes as SH
+
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if not r.get("ok") or r.get("skipped"):
+            if r.get("skipped"):
+                out.append({"arch": r["arch"], "shape": r["shape"],
+                            "skipped": True})
+            continue
+        cfg = get_config(r["arch"])
+        shape = SH.SHAPES[r["shape"]]
+        h = r["hlo"]
+        n_dev = r.get("n_devices", 256)
+        terms = {
+            "compute": h["flops"] / PEAK,
+            "memory": h["bytes"] / HBM,
+            "collective": h["collective_total"] / ICI,
+        }
+        # TPU-native estimate: bf16 collectives that XLA:CPU promoted to
+        # f32 counted at bf16 width (hlo_analysis detects the promotion)
+        tpu_coll = h.get("collective_total_tpu")
+        terms["collective_tpu"] = (tpu_coll / ICI if tpu_coll is not None
+                                   else terms["collective"])
+        dom = max(("compute", "memory", "collective"), key=terms.get)
+        mf = model_flops(cfg, shape)
+        ratio = mf / max(h["flops"] * n_dev, 1)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "terms": terms,
+            "dominant": dom, "model_flops": mf, "useful_ratio": ratio,
+            "bound_s": max(terms.values()),
+            "suggestion": suggest(dom, r, cfg, shape),
+            "skipped": False,
+        })
+    return out
+
+
+def write_markdown(rws, path="artifacts/roofline.md"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) "
+        "[tpu-adj] | dominant | MODEL_FLOPS | useful ratio | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rws:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (DESIGN.md §4) | — | — |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.3e} | "
+            f"{t['memory']:.3e} | {t['collective']:.3e} "
+            f"[{t['collective_tpu']:.3e}] | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{r['suggestion']} |")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def main():
+    rws = rows()
+    if not rws:
+        emit("roofline.status", "no dry-run artifacts",
+             "run: python -m repro.launch.dryrun --arch all --shape all")
+        return
+    for r in rws:
+        if r.get("skipped"):
+            emit(f"roofline.{r['arch']}.{r['shape']}", "skipped")
+            continue
+        t = r["terms"]
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             f"{r['bound_s']:.3e}",
+             f"dom={r['dominant']} comp={t['compute']:.2e} "
+             f"mem={t['memory']:.2e} coll={t['collective']:.2e} "
+             f"useful={r['useful_ratio']:.2f}")
+    path = write_markdown(rws)
+    emit("roofline.markdown", path)
+
+
+if __name__ == "__main__":
+    main()

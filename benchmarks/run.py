@@ -1,0 +1,43 @@
+"""Benchmark suite entrypoint: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+prints ``name,value,derived`` CSV rows per benchmark.
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+SUITES = [
+    "bench_precision",     # Fig 5 / Table 1  (DiTorch alignment)
+    "bench_dicomm",        # Fig 7 / Table 3  (DiComm latency, NIC affinity)
+    "bench_homogeneous",   # Table 6          (homogeneous TGS baselines)
+    "bench_hetero",        # Table 7 / Fig 11 / Table 8 (HeteroAuto)
+    "bench_ablation",      # Table 9 / Fig 12 (ablations)
+    "bench_kernels",       # kernel structure + correctness
+    "roofline",            # assignment §Roofline (reads dry-run artifacts)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    suites = [s for s in SUITES if args.only in (None, s)]
+    failed = []
+    for name in suites:
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f".{name}", __package__)
+            mod.main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""HeteroAuto walkthrough — the paper's core contribution, end to end:
+
+  1. describe a hyper-heterogeneous cluster (chip types × counts),
+  2. reproduce the homogeneous Table 6 baselines,
+  3. search a HeteroPP plan (DFS + two-stage refinement),
+  4. report HeteroSpeedupRatio (Fig 11) and replay the plan through the
+     1F1B schedule simulator with DiComm transports (Table 9 style).
+
+    PYTHONPATH=src python examples/hetero_search.py \
+        [--cluster A:256,B:256,C:256] [--gbs-mtokens 6]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import chips, heteroauto, schedule as SCH
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", default="A:256,B:256,C:256",
+                    help="comma list of CHIP:COUNT "
+                         f"(chips: {list(chips.CHIPS)})")
+    ap.add_argument("--gbs-mtokens", type=float, default=6.0)
+    ap.add_argument("--model", default="h2_100b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    groups = []
+    for part in args.cluster.split(","):
+        name, count = part.split(":")
+        groups.append(chips.ChipGroup(chips.CHIPS[name], int(count)))
+    gbs = int(args.gbs_mtokens * 2 ** 20)
+
+    print(f"model: {cfg.name} ({cfg.param_count() / 1e9:.0f}B), "
+          f"GBS {gbs / 2 ** 20:.0f}M tokens")
+    print("cluster:", ", ".join(f"{g.spec.name}x{g.count}" for g in groups))
+
+    baselines = []
+    for g in groups:
+        t6 = chips.TABLE6.get(g.spec.name)
+        r = heteroauto.homogeneous_baseline(
+            g, cfg, 2 * 2 ** 20, 4096,
+            fixed={"dp": t6["dp"], "tp": t6["tp"],
+                   "recompute": t6["recompute"]} if t6 else None,
+            allow_offload=True)
+        baselines.append((g, r))
+        print(f"  homogeneous {g.spec.name}: TGS={r.tgs:.1f}")
+
+    r = heteroauto.search(groups, cfg, gbs, 4096, two_stage=True)
+    if r.plan is None:
+        print("no feasible heterogeneous plan")
+        return
+    print(f"\nHeteroAuto plan ({r.search_time_s:.2f}s, "
+          f"{r.evaluated} configs):")
+    print(" ", r.plan.describe())
+    print(f"  iteration time: {r.cost.iter_time:.2f}s  TGS={r.tgs:.1f}")
+    ratio = heteroauto.hetero_speedup_ratio(r, baselines)
+    print(f"  HeteroSpeedupRatio = {ratio:.2%} "
+          f"{'(superlinear!)' if ratio > 1 else ''}")
+
+    for transport in ("device_rdma", "cpu_tcp"):
+        tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(
+            r.plan, cfg, 4096, transport=transport)
+        sim = SCH.simulate_1f1b(tf, tb, b, tp2p, t_update=tu)
+        print(f"  1F1B replay [{transport:11s}]: makespan={sim.makespan:.2f}s "
+              f"bubble={sim.bubble_frac:.1%}")
+
+
+if __name__ == "__main__":
+    main()

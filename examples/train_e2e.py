@@ -1,0 +1,85 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param model for
+a few hundred steps on the synthetic structured stream with checkpointing
+and a resume test.  The default invocation is CPU-sized; pass --full-100m
+for the ~100M-parameter variant (slower on CPU, the config the deliverable
+names).
+
+    PYTHONPATH=src python examples/train_e2e.py                # ~20M, fast
+    PYTHONPATH=src python examples/train_e2e.py --full-100m --steps 300
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing.io import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_loader
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import make_train_state, make_train_step
+
+
+def model_config(full: bool) -> ModelConfig:
+    if full:  # ~100M params (GPT-small-ish llama)
+        return ModelConfig(name="e2e-100m", family="dense", num_layers=12,
+                           d_model=768, num_heads=12, num_kv_heads=4,
+                           d_ff=2048, vocab_size=32000, dtype="float32")
+    return ModelConfig(name="e2e-20m", family="dense", num_layers=6,
+                       d_model=384, num_heads=6, num_kv_heads=2,
+                       d_ff=1024, vocab_size=8192, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_config(args.full_100m)
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, remat=True))
+    loader = make_loader(cfg, DataConfig(batch_size=args.batch,
+                                         seq_len=args.seq))
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        state, m = step(state, next(loader))
+        losses.append(float(m["loss"]))
+        if (i + 1) % 20 == 0:
+            tgs = args.batch * args.seq * (i + 1) / (time.perf_counter() - t0)
+            print(f"step {i + 1:4d} loss={losses[-1]:.4f} TGS={tgs:.0f}")
+        if (i + 1) % 50 == 0:
+            save_checkpoint(args.ckpt, state, step=i + 1)
+    loader.close()
+    save_checkpoint(args.ckpt, state, step=args.steps)
+
+    # resume check: restored state reproduces the same loss
+    restored = load_checkpoint(args.ckpt, jax.eval_shape(lambda: state))
+    src2 = make_loader(cfg, DataConfig(batch_size=args.batch,
+                                       seq_len=args.seq, seed=99))
+    b = next(src2)
+    src2.close()
+    _, m1 = step(state, b)
+    _, m2 = step(restored, b)
+    print(f"resume check: loss {float(m1['loss']):.6f} == "
+          f"{float(m2['loss']):.6f}")
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+
+    drop = losses[0] - min(losses[-10:])
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} (drop {drop:.2f}) "
+          f"{'OK' if drop > 0.5 else 'WARN: little learning'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Sharded numpy checkpointing with resharding restore.
+
+Checkpoints are a directory of ``shard-*.npz`` files plus an index json
+mapping flattened pytree paths to (file, key, shape, dtype).  Restore is
+layout-independent: arrays are loaded on host and device_put with whatever
+shardings the restoring mesh dictates, so a checkpoint taken on one mesh can
+be restored onto another (the paper's elastic-resource scenario).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SHARD_BYTES = 1 << 30  # 1 GiB per shard file
+
+
+def _flatten(tree: PyTree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[path] = leaf
+    return out
+
+
+def save_checkpoint(path: str, state: PyTree, *, step: Optional[int] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    index: Dict[str, Any] = {"step": step, "entries": {}}
+    shard_id, shard_bytes, buf = 0, 0, {}
+
+    def flush():
+        nonlocal shard_id, shard_bytes, buf
+        if buf:
+            np.savez(os.path.join(path, f"shard-{shard_id:05d}.npz"), **buf)
+            shard_id += 1
+            shard_bytes, buf = 0, {}
+
+    for i, (name, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"a{i}"
+        dtype = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16 etc): store raw
+            arr = arr.view(np.uint8).reshape(*arr.shape, -1)
+        index["entries"][name] = {
+            "file": f"shard-{shard_id:05d}.npz", "key": key,
+            "shape": list(leaf.shape), "dtype": dtype}
+        buf[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= _SHARD_BYTES:
+            flush()
+            # subsequent entries go to the new shard
+    flush()
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+
+
+def load_checkpoint(path: str, target: PyTree, shardings: Optional[PyTree] = None
+                    ) -> PyTree:
+    """Restore into the structure of ``target`` (values ignored)."""
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    entries = index["entries"]
+    files: Dict[str, Any] = {}
+
+    def get(name):
+        e = entries[name]
+        if e["file"] not in files:
+            files[e["file"]] = np.load(os.path.join(path, e["file"]))
+        arr = files[e["file"]][e["key"]]
+        if list(arr.shape) != list(e["shape"]):   # raw-byte-encoded dtype
+            import ml_dtypes
+            dt = np.dtype(getattr(ml_dtypes, e["dtype"], e["dtype"]))
+            arr = arr.reshape(-1).view(dt).reshape(e["shape"])
+        return arr
+
+    flat_t = _flatten(target)
+    flat_s = _flatten(shardings) if shardings is not None else {}
+    restored = {}
+    for name, leaf in flat_t.items():
+        arr = get(name)
+        assert list(arr.shape) == list(leaf.shape), \
+            f"{name}: ckpt {arr.shape} vs target {leaf.shape}"
+        if name in flat_s:
+            restored[name] = jax.device_put(arr, flat_s[name])
+        else:
+            restored[name] = jnp.asarray(arr)
+    # unflatten back into target structure
+    leaves_t, treedef = jax.tree_util.tree_flatten(target)
+    kps = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(target)[0]
+    ]
+    return jax.tree_util.tree_unflatten(treedef, [restored[k] for k in kps])
+
+
+def checkpoint_step(path: str) -> Optional[int]:
+    try:
+        with open(os.path.join(path, "index.json")) as f:
+            return json.load(f)["step"]
+    except (FileNotFoundError, KeyError):
+        return None

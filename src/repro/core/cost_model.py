@@ -1,0 +1,169 @@
+"""HeteroPP cost model (paper §4.3.2).
+
+    T = max_i ( b·T_i^comp + T_i^update + α·Σ_{j≠i} T_j^comp )
+
+with T_i^comp = ceil(l_i / s_pp,i) · (t^fwd + t^bwd + r_i·t^recomp) and α the
+pipeline-schedule bubble coefficient (1 for the paper's 1F1B, 0 for ZB-V).
+Memory feasibility follows Observation #4: stage k of the global pipeline
+holds min(b, s_pp − k) in-flight microbatch activation sets under 1F1B.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from .chips import ChipGroup, ChipSpec
+from .profiler import (analytic_layer_profile, layer_param_count,
+                       offload_time, update_time, LayerProfile)
+from ..models.config import ModelConfig
+
+MEM_SAFETY = 0.92
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """All pipeline stages owned by ONE chip type (identical by paper
+    requirement #1: same tp, same layers per stage)."""
+    group: ChipGroup
+    tp: int
+    pp: int                  # number of pipeline stages of this chip type
+    layers: int              # total layers assigned to this chip type
+    recompute: bool
+
+    @property
+    def layers_per_stage(self) -> int:
+        return math.ceil(self.layers / self.pp)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    stages: List[StagePlan]  # ordered: largest-memory chip type first
+    dp: int
+    microbatches: int        # b = B / s_dp (microbatch = 1 sequence)
+
+    @property
+    def total_pp(self) -> int:
+        return sum(s.pp for s in self.stages)
+
+    @property
+    def total_chips(self) -> int:
+        return sum(s.pp * s.tp * self.dp for s in self.stages)
+
+    def describe(self) -> str:
+        parts = [f"dp={self.dp} b={self.microbatches} pp={self.total_pp}"]
+        for s in self.stages:
+            parts.append(
+                f"{s.group.name}[pp={s.pp} tp={s.tp} l={s.layers} "
+                f"r={int(s.recompute)}]")
+        return " ".join(parts)
+
+
+@dataclasses.dataclass
+class PlanCost:
+    iter_time: float
+    tgs: float
+    feasible: bool
+    stage_mem_gb: List[float]
+    stage_cap_gb: List[float]
+    t_comp: List[float]
+    t_update: List[float]
+    bubble_frac: float
+    offload: List[bool]
+
+
+def stage_profiles(plan: ParallelPlan, cfg: ModelConfig, seq_len: int
+                   ) -> List[LayerProfile]:
+    return [analytic_layer_profile(s.group.spec, cfg, s.tp, seq_len)
+            for s in plan.stages]
+
+
+def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
+             gbs_tokens: float, *, alpha: float = 1.0,
+             allow_offload: bool = False,
+             profiles: Optional[Sequence[LayerProfile]] = None) -> PlanCost:
+    b = plan.microbatches
+    profs = list(profiles) if profiles is not None else \
+        stage_profiles(plan, cfg, seq_len)
+
+    t_comp, t_upd, mems, caps, off = [], [], [], [], []
+    stage_offset = 0
+    feasible = True
+    for s, prof in zip(plan.stages, profs):
+        lps = s.layers_per_stage
+        per_mb = prof.t_fwd + prof.t_bwd + (prof.t_recomp if s.recompute else 0.0)
+        tc = lps * per_mb
+        tu = update_time(s.group.spec, cfg, s.tp, plan.dp, lps)
+
+        # ---- memory (worst stage of this type = its FIRST global stage) ----
+        w_bytes = lps * prof.layer_param_bytes
+        grad_bytes = w_bytes                       # bf16 grads
+        opt_bytes = 6 * w_bytes / plan.dp          # fp32 master+m+v, ZeRO-1
+        inflight = min(b, plan.total_pp - stage_offset)
+        act_per_mb = lps * (prof.act_boundary_bytes if s.recompute
+                            else prof.act_bytes)
+        mem = w_bytes + grad_bytes + opt_bytes + inflight * act_per_mb
+        cap = s.group.spec.memory_bytes * MEM_SAFETY
+        is_off = False
+        if mem > cap:
+            if allow_offload:
+                deficit = mem - cap
+                # offloading trades the deficit for PCIe transfers on the
+                # critical path, amortized over the b microbatches
+                tc += offload_time(s.group.spec, cfg, s.tp, lps,
+                                   deficit / max(b, 1))
+                is_off = True
+            else:
+                feasible = False
+        t_comp.append(tc)
+        t_upd.append(tu)
+        mems.append(mem / 2 ** 30)
+        caps.append(s.group.spec.memory_bytes / 2 ** 30)
+        off.append(is_off)
+        stage_offset += s.pp
+
+    sum_comp = sum(tc * s.pp for tc, s in zip(t_comp, plan.stages))
+    iter_time = 0.0
+    for i, s in enumerate(plan.stages):
+        t = b * t_comp[i] + t_upd[i] + alpha * (sum_comp - t_comp[i])
+        iter_time = max(iter_time, t)
+    bubble = alpha * (sum_comp - min(t_comp)) / max(iter_time, 1e-9)
+    tgs = gbs_tokens / (iter_time * plan.total_chips) if iter_time > 0 else 0.0
+    return PlanCost(iter_time, tgs, feasible, mems, caps, t_comp, t_upd,
+                    bubble, off)
+
+
+# ---------------------------------------------------------------------------
+# layer sharding (paper §4.3.3 step 2)
+# ---------------------------------------------------------------------------
+
+def assign_layers(stages: List[StagePlan], cfg: ModelConfig, seq_len: int,
+                  total_layers: int) -> Optional[List[StagePlan]]:
+    """Heuristic optimal layer sharding: equalize per-stage compute time,
+    round to integers, then repair against per-type minimums."""
+    profs = [analytic_layer_profile(s.group.spec, cfg, s.tp, seq_len)
+             for s in stages]
+    t_layer = [p.t_fwd + p.t_bwd + (p.t_recomp if s.recompute else 0.0)
+               for s, p in zip(stages, profs)]
+    w = [s.pp / t for s, t in zip(stages, t_layer)]
+    raw = [total_layers * wi / sum(w) for wi in w]
+    l = [max(s.pp, int(round(r))) for s, r in zip(stages, raw)]
+    # fix rounding so sum == total_layers
+    def slack(i):  # how much adding a layer to type i hurts
+        return t_layer[i] / stages[i].pp
+    for _ in range(10 * len(stages) + 64):
+        diff = sum(l) - total_layers
+        if diff == 0:
+            break
+        if diff > 0:
+            cands = [i for i in range(len(l)) if l[i] > stages[i].pp]
+            if not cands:
+                return None
+            i = max(cands, key=lambda i: l[i] * slack(i) / stages[i].pp)
+            l[i] -= 1
+        else:
+            i = min(range(len(l)), key=lambda i: (l[i] + 1) * slack(i))
+            l[i] += 1
+    if sum(l) != total_layers:
+        return None
+    return [dataclasses.replace(s, layers=li) for s, li in zip(stages, l)]

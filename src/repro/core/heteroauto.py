@@ -1,0 +1,194 @@
+"""HeteroAuto — automatic parallelism-strategy search (paper §4.3.3).
+
+Procedure (faithful to the paper):
+  1. DFS over the parallelism space: candidate data-parallel degrees s_dp
+     (divisors of the global batch), and per chip type a tensor-parallel
+     degree s_tp,i ∈ powers of two ≤ TP_MAX_i with
+     N_i = s_pp,i × s_tp,i × s_dp  ⇒  s_pp,i implied; chip types are
+     visited in descending memory order (Observation #4).
+  2. Optimal layer sharding per configuration (equalize compute, repair
+     for memory/minimums) — ``cost_model.assign_layers``.
+  3. Cost estimation via the §4.3.2 model; keep the argmin.
+
+Two-stage refinement: stage 1 fixes s_dp at coarse (whole-island)
+granularity; stage 2 re-splits each island into pseudo-heterogeneous
+subgroups (default 128 chips) under the fixed s_dp with the paper's
+monotone-TP pruning (within one chip type, an earlier subgroup's s_tp must
+be ≥ a later one's).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+from .chips import ChipGroup
+from .cost_model import (ParallelPlan, PlanCost, StagePlan, assign_layers,
+                         evaluate)
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SearchResult:
+    plan: Optional[ParallelPlan]
+    cost: Optional[PlanCost]
+    evaluated: int
+    search_time_s: float
+    stage1_dp: Optional[int] = None
+
+    @property
+    def tgs(self) -> float:
+        return self.cost.tgs if self.cost else 0.0
+
+
+def _tp_candidates(group: ChipGroup, dp: int) -> List[int]:
+    out = []
+    tp = 1
+    while tp <= group.spec.tp_max:
+        if group.count % (tp * dp) == 0 and group.count // (tp * dp) >= 1:
+            out.append(tp)
+        tp *= 2
+    return out
+
+
+def _dp_candidates(groups: Sequence[ChipGroup], batch_seqs: int,
+                   max_dp: int = 64) -> List[int]:
+    cands = []
+    for dp in range(1, min(batch_seqs, max_dp) + 1):
+        if batch_seqs % dp:
+            continue
+        if all(any(g.count % (tp * dp) == 0 and tp <= g.spec.tp_max
+                   for tp in (1, 2, 4, 8, 16)) for g in groups):
+            cands.append(dp)
+    return cands
+
+
+def _ordered(groups: Sequence[ChipGroup]) -> List[ChipGroup]:
+    # Observation #4: larger memory -> earlier pipeline stages
+    return sorted(groups, key=lambda g: -g.spec.memory_bytes)
+
+
+def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
+           seq_len: int, *, alpha: float = 1.0, two_stage: bool = True,
+           subgroup: int = 128, allow_offload: bool = False,
+           monotone_tp: bool = True, dp_candidates: Optional[List[int]] = None,
+           ) -> SearchResult:
+    t0 = time.perf_counter()
+    batch_seqs = gbs_tokens // seq_len
+    groups = _ordered(groups)
+    dps = dp_candidates or _dp_candidates(groups, batch_seqs)
+
+    best_plan, best_cost, evaluated = None, None, 0
+
+    def consider(stages: List[StagePlan], dp: int):
+        nonlocal best_plan, best_cost, evaluated
+        sharded = assign_layers(stages, cfg, seq_len, cfg.num_layers)
+        if sharded is None:
+            return
+        plan = ParallelPlan(sharded, dp, batch_seqs // dp)
+        cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
+                        allow_offload=allow_offload)
+        evaluated += 1
+        if not cost.feasible:
+            return
+        if best_cost is None or cost.iter_time < best_cost.iter_time:
+            best_plan, best_cost = plan, cost
+
+    def dfs(idx: int, dp: int, stages: List[StagePlan],
+            prev_tp_by_type: dict, rec_by_type: dict):
+        if idx == len(groups):
+            consider(stages, dp)
+            return
+        g = groups[idx]
+        for tp in _tp_candidates(g, dp):
+            if monotone_tp and g.spec.name in prev_tp_by_type \
+                    and tp > prev_tp_by_type[g.spec.name]:
+                continue  # paper's pruning: s_tp,a >= s_tp,b for a before b
+            pp = g.count // (tp * dp)
+            prev = dict(prev_tp_by_type)
+            prev[g.spec.name] = tp
+            # recompute r_i is searched per chip TYPE (paper §4.3.1)
+            recs = ((rec_by_type[g.spec.name],) if g.spec.name in rec_by_type
+                    else (False, True))
+            for rec in recs:
+                st = StagePlan(g, tp, pp, layers=0, recompute=rec)
+                rbt = dict(rec_by_type)
+                rbt[g.spec.name] = rec
+                dfs(idx + 1, dp, stages + [st], prev, rbt)
+
+    # ---------------- stage 1: find s_dp at island granularity -------------
+    for dp in dps:
+        dfs(0, dp, [], {}, {})
+    stage1_dp = best_plan.dp if best_plan else None
+
+    # ---------------- stage 2: subgroup refinement under fixed dp ----------
+    if two_stage and best_plan is not None:
+        dp = best_plan.dp
+        split: List[ChipGroup] = []
+        for g in groups:
+            n, i = g.count, 0
+            while n > 0:
+                take = min(subgroup, n)
+                if take % dp:   # keep subgroups dp-divisible
+                    take = n
+                split.append(ChipGroup(g.spec, take, f"{g.spec.name}{i}"))
+                n -= take
+                i += 1
+        if len(split) > len(groups):
+            saved_groups = groups
+            groups = _ordered(split)
+            dfs(0, dp, [], {}, {})
+            groups = saved_groups
+
+    return SearchResult(best_plan, best_cost, evaluated,
+                        time.perf_counter() - t0, stage1_dp)
+
+
+# ---------------------------------------------------------------------------
+# homogeneous baseline (Table 6 reproduction + HeteroSpeedupRatio input)
+# ---------------------------------------------------------------------------
+
+def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
+                         seq_len: int, *, alpha: float = 1.0,
+                         allow_offload: bool = True,
+                         fixed: Optional[dict] = None) -> SearchResult:
+    """Best homogeneous 3D-parallel config for one chip type (or evaluate a
+    pinned configuration, e.g. the paper's Table 6 entries)."""
+    t0 = time.perf_counter()
+    batch_seqs = gbs_tokens // seq_len
+    best_plan, best_cost, evaluated = None, None, 0
+    if fixed is not None:
+        combos = [(fixed["dp"], fixed["tp"], fixed["recompute"])]
+    else:
+        combos = []
+        for dp in _dp_candidates([group], batch_seqs):
+            for tp in _tp_candidates(group, dp):
+                for rec in (False, True):
+                    combos.append((dp, tp, rec))
+    for dp, tp, rec in combos:
+        if group.count % (tp * dp):
+            continue
+        pp = group.count // (tp * dp)
+        if pp < 1 or cfg.num_layers < pp:
+            continue
+        st = StagePlan(group, tp, pp, layers=cfg.num_layers, recompute=rec)
+        plan = ParallelPlan([st], dp, batch_seqs // dp)
+        cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
+                        allow_offload=allow_offload)
+        evaluated += 1
+        if not cost.feasible:
+            continue
+        if best_cost is None or cost.iter_time < best_cost.iter_time:
+            best_plan, best_cost = plan, cost
+    return SearchResult(best_plan, best_cost, evaluated,
+                        time.perf_counter() - t0)
+
+
+def hetero_speedup_ratio(hetero: SearchResult,
+                         baselines: Sequence[Tuple[ChipGroup, SearchResult]]
+                         ) -> float:
+    """Fig. 11 metric: N·TGS_hetero / Σ_i N_i·TGS_i."""
+    num = sum(g.count for g, _ in baselines) * hetero.tgs
+    den = sum(g.count * r.tgs for g, r in baselines)
+    return num / den if den else 0.0

@@ -1,0 +1,263 @@
+"""HeteroPP runtime — heterogeneous pipeline parallelism in JAX.
+
+Two execution paths (DESIGN.md §2 explains the SPMD constraint):
+
+* ``simulate_*``   — sequential per-stage execution on the local device(s),
+  bit-identical to the monolithic model: the numerics oracle for tests and
+  the tick-level schedule studies.
+
+* ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe``/``pod`` axis
+  with GSPMD left automatic over ``data``/``model``: every device runs the
+  same program; per-stage *data* (padded stacked layer weights) differs.
+  Microbatches stream through a circular scan schedule; stage-to-stage
+  activation transfer is ``jax.lax.ppermute`` (the DiComm device-direct
+  analogue).  Backward is derived by autodiff through the scan + ppermute —
+  a GPipe-memory schedule with per-layer remat; 1F1B/ZB-V bubble behaviour
+  is modeled by the cost model's α and the ``schedule.py`` simulator.
+
+Non-uniform layer counts: stages are padded to max layers/stage and masked
+per-stage (idle compute on short stages is the price of SPMD; HeteroAuto's
+cost model accounts the true per-stage time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import layers, model as M, transformer as tfm
+from ..models.config import ModelConfig
+from ..optim import adamw
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    num_stages: int
+    layers_per_stage: Tuple[int, ...]     # non-uniform (HeteroPP)
+    microbatches: int
+    recompute: Tuple[bool, ...] = ()      # per-stage (simulate/cost model)
+    pipe_axis: str = "pipe"
+
+    def __post_init__(self):
+        assert len(self.layers_per_stage) == self.num_stages
+        if not self.recompute:
+            object.__setattr__(self, "recompute",
+                               (True,) * self.num_stages)
+
+    @property
+    def total_layers(self) -> int:
+        return sum(self.layers_per_stage)
+
+    @property
+    def max_layers(self) -> int:
+        return max(self.layers_per_stage)
+
+
+def from_plan(plan, microbatches: Optional[int] = None) -> PipelineSpec:
+    """Build a runtime PipelineSpec from a HeteroAuto ParallelPlan."""
+    lps, rec = [], []
+    for s in plan.stages:
+        per = s.layers_per_stage
+        left = s.layers
+        for _ in range(s.pp):
+            take = min(per, left)
+            lps.append(take)
+            rec.append(s.recompute)
+            left -= take
+    return PipelineSpec(len(lps), tuple(lps), microbatches or plan.microbatches,
+                        tuple(rec))
+
+
+# ---------------------------------------------------------------------------
+# stage parameter construction
+# ---------------------------------------------------------------------------
+
+def split_stage_params(params: PyTree, cfg: ModelConfig, spec: PipelineSpec
+                       ) -> Tuple[PyTree, jnp.ndarray]:
+    """Split stacked block params (L, ...) into padded (S, Lmax, ...) plus a
+    per-stage validity mask (S, Lmax).  Embedding/final-norm params are
+    replicated to every stage (stage 0 uses embed, last uses unembed)."""
+    L = cfg.num_layers
+    S, Lmax = spec.num_stages, spec.max_layers
+    assert spec.total_layers == L, (spec.layers_per_stage, L)
+
+    bounds = np.cumsum([0] + list(spec.layers_per_stage))
+    mask = np.zeros((S, Lmax), np.bool_)
+    for s in range(S):
+        mask[s, : spec.layers_per_stage[s]] = True
+
+    def split(leaf):
+        pads = [(0, 0)] * (leaf.ndim)
+        out = []
+        for s in range(S):
+            part = leaf[bounds[s]:bounds[s + 1]]
+            pad = Lmax - part.shape[0]
+            if pad:
+                part = jnp.pad(part, [(0, pad)] + [(0, 0)] * (leaf.ndim - 1))
+            out.append(part)
+        return jnp.stack(out)                        # (S, Lmax, ...)
+
+    stage_params = {
+        "blocks": jax.tree.map(split, params["blocks"]),
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+    }
+    return stage_params, jnp.asarray(mask)
+
+
+def abstract_stage_params(cfg: ModelConfig, spec: PipelineSpec) -> PyTree:
+    params = M.abstract_params(cfg)
+    return jax.eval_shape(
+        lambda p: split_stage_params(p, cfg, spec)[0], params)
+
+
+# ---------------------------------------------------------------------------
+# stage compute
+# ---------------------------------------------------------------------------
+
+def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool):
+    """Run Lmax (padded) layers; masked layers are identity."""
+
+    def one(x, inp):
+        p, valid = inp
+        y, m = tfm.block_forward(p, cfg, x, kind)
+        aux = m.get("moe_aux_loss", 0.0) + m.get("moe_z_loss", 0.0)
+        x = jnp.where(valid, y, x)
+        return x, jnp.where(valid, jnp.asarray(aux, jnp.float32), 0.0)
+
+    body = jax.checkpoint(one) if remat else one
+    x, auxs = jax.lax.scan(body, x, (blocks, mask_row))
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# SPMD pipeline (shard_map over the pipe axis)
+# ---------------------------------------------------------------------------
+
+def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
+                            *, remat: bool = True):
+    """Returns loss_fn(stage_params, mask, batch) -> (loss, metrics), where
+    inside ``shard_map`` each pipe-axis member holds ONE stage.
+
+    batch["tokens"]: (b, mb_size, S_seq) — b microbatches.
+    """
+    kind = M._block_kind(cfg)
+    axis = spec.pipe_axis
+    nstages = spec.num_stages
+    b = spec.microbatches
+    ticks = b + nstages - 1
+    auto = frozenset(a for a in mesh.axis_names if a != axis)
+
+    def stage_loss(stage_params, mask, tokens):
+        # Inside shard_map: leading stage dim is local (size 1) -> squeeze.
+        blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
+        mask_row = mask[0]
+        embed = stage_params["embed"]
+        fnorm = stage_params["final_norm"]
+        sid = jax.lax.axis_index(axis)
+        is_first = sid == 0
+        is_last = sid == nstages - 1
+
+        mb_size, S_seq = tokens.shape[1], tokens.shape[2]
+        d = cfg.d_model
+        dtype = layers.dtype_of(cfg)
+
+        def tick(carry, t):
+            x_in, loss_acc, aux_acc, denom = carry
+            mb_idx = jnp.clip(t - sid, 0, b - 1)
+            toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+                                                keepdims=False)
+            # stage 0 injects the embedded microbatch; others use received x
+            x0 = layers.embed_tokens(embed, toks).astype(dtype)
+            x = jnp.where(is_first, x0, x_in)
+            active = (t - sid >= 0) & (t - sid < b)
+            y, aux = _stage_forward(blocks, mask_row, cfg, x, kind, remat)
+            # last stage computes the LM loss for its finished microbatch
+            h = layers.apply_norm(fnorm, y, cfg.norm)
+            targets = jnp.concatenate(
+                [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+            lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+            ce = M.chunked_ce(embed, h, targets, lmask)
+            take = active & is_last
+            loss_acc = loss_acc + jnp.where(take, ce, 0.0)
+            denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
+            aux_acc = aux_acc + jnp.where(active, aux, 0.0)
+            # shift activations down the pipe for the next tick
+            perm = [(i, i + 1) for i in range(nstages - 1)]
+            x_next = jax.lax.ppermute(y, axis, perm)
+            return (x_next, loss_acc, aux_acc, denom), None
+
+        x_init = jnp.zeros((mb_size, S_seq, d), dtype)
+        carry = (x_init, jnp.float32(0), jnp.float32(0), jnp.float32(0))
+        (x_last, loss_sum, aux_sum, denom), _ = jax.lax.scan(
+            tick, carry, jnp.arange(ticks))
+        # broadcast the last stage's loss to every pipe member
+        loss_sum = jax.lax.psum(loss_sum, axis)
+        denom = jax.lax.psum(denom, axis)
+        aux_sum = jax.lax.psum(aux_sum, axis) / nstages
+        return loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+
+    aps = abstract_stage_params(cfg, spec)
+    in_specs = (
+        {
+            "blocks": jax.tree.map(lambda _: P(axis), aps["blocks"]),
+            "embed": jax.tree.map(lambda _: P(), aps["embed"]),
+            "final_norm": jax.tree.map(lambda _: P(), aps["final_norm"]),
+        },
+        P(axis),
+        P(),
+    )
+    kwargs = {"check_vma": False}
+    if auto:
+        # manual over the pipe axis only; data/model stay GSPMD-automatic
+        kwargs["axis_names"] = {axis}
+    smapped = jax.shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(), **kwargs)
+    return smapped
+
+
+def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
+                                  mesh: Mesh, opt_cfg=None, *, remat=True):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    loss_fn = make_spmd_pipeline_loss(cfg, spec, mesh, remat=remat)
+
+    def train_step(state, mask, batch):
+        params, opt_state, step = state
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, mask, batch["tokens"]))(params)
+        new_params, new_opt, om = adamw.apply_update(
+            opt_cfg, opt_state, grads, step, params)
+        return (new_params, new_opt, step + 1), {"loss": loss, **om}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# simulate path (numerics oracle; supports per-stage recompute trivially)
+# ---------------------------------------------------------------------------
+
+def simulate_pipeline_forward(params: PyTree, cfg: ModelConfig,
+                              spec: PipelineSpec, batch: Dict[str, jnp.ndarray]
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the pipeline stage-by-stage on the local device; must equal the
+    monolithic ``M.forward`` exactly (tested)."""
+    stage_params, mask = split_stage_params(params, cfg, spec)
+    kind = M._block_kind(cfg)
+    tokens = batch["tokens"]
+    x = layers.embed_tokens(params["embed"], tokens)
+    aux_total = jnp.float32(0)
+    for s in range(spec.num_stages):
+        blocks = jax.tree.map(lambda t: t[s], stage_params["blocks"])
+        x, aux = _stage_forward(blocks, mask[s], cfg, x, kind,
+                                remat=spec.recompute[s])
+        aux_total = aux_total + aux
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed(params["embed"], x)
+    return logits, aux_total

@@ -1,0 +1,159 @@
+"""Auto-profiler: layer-wise per-chip time and memory profiles.
+
+The paper profiles each chip on real hardware (``t^fwd_{s_tp,i}``,
+``t^bwd``, ``t^recomp``, ``t^update_{s_dp,s_tp,i}`` plus layer memory with
+and without recomputation — §4.3.2).  Without the vendor hardware we build
+the same profile *analytically* from a roofline model of each chip
+(flops / TP-collective bytes / NIC bytes), with per-chip ``mfu`` calibrated
+so the homogeneous baselines reproduce Table 6.  The profile OBJECT has the
+same shape either way, so HeteroAuto is agnostic to its provenance — on a
+real cluster, ``measure_layer_profile`` (below) fills the same fields from
+wall-clock timings of the real JAX model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+from .chips import ChipSpec
+from ..models.config import ModelConfig
+
+BYTES_ACT = 2          # bf16 activations
+# saved activation bytes per token per layer without recomputation
+# (attn qkv/scores/out + mlp intermediates, Megatron-style accounting;
+# 34·S·d·bytes is the classic no-flash-attention Megatron figure, which is
+# the right regime for 2024-era heterogeneous vendor chips)
+ACT_FACTOR = 34
+# with recomputation only the layer-boundary activation is kept
+ACT_BOUNDARY = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """Per-(chip, model, tp) profile for ONE transformer layer and ONE
+    microbatch (= 1 sequence of ``seq_len`` tokens, per the paper's
+    micro-batch-size-1 regime)."""
+    t_fwd: float
+    t_bwd: float
+    t_recomp: float
+    tp_comm: float               # per-microbatch TP collective time (fwd)
+    layer_param_bytes: float     # per chip (already / tp)
+    act_bytes: float             # saved per microbatch w/o recompute (/ tp)
+    act_boundary_bytes: float    # saved per microbatch w/ recompute
+
+
+@functools.lru_cache(maxsize=512)
+def layer_flops_per_token(cfg: ModelConfig) -> float:
+    """Forward FLOPs per token per layer (matmuls, incl. causal attention)."""
+    d = cfg.d_model
+    attn = 2 * d * (cfg.num_heads + cfg.num_kv_heads * 2 + cfg.num_heads) * cfg.head_dim
+    attn += 2 * 2 * (cfg.max_seq_len / 2) * cfg.num_heads * cfg.head_dim  # scores+PV, causal
+    if cfg.is_moe:
+        ff = 2 * (3 if cfg.mlp in ("swiglu", "geglu", "glu") else 2) * \
+            d * cfg.d_ff * cfg.experts_per_token
+        ff += 2 * d * cfg.num_experts   # router
+    else:
+        ff = 2 * (3 if cfg.mlp in ("swiglu", "geglu", "glu") else 2) * d * cfg.d_ff
+    return attn + ff
+
+
+@functools.lru_cache(maxsize=512)
+def layer_param_count(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    attn = d * (2 * cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+    if cfg.is_moe:
+        ff = cfg.num_experts * (3 if cfg.mlp in ("swiglu", "geglu", "glu")
+                                else 2) * d * cfg.d_ff
+    else:
+        ff = (3 if cfg.mlp in ("swiglu", "geglu", "glu") else 2) * d * cfg.d_ff
+    return attn + ff
+
+
+@functools.lru_cache(maxsize=4096)
+def _analytic_layer_profile_cached(chip: ChipSpec, cfg_key: str, tp: int,
+                                   seq_len: int, fl_fwd: float, params: float,
+                                   d_model: int) -> LayerProfile:
+    t_fwd_compute = fl_fwd / (tp * chip.peak_flops * chip.mfu)
+    ar_bytes = 2 * seq_len * d_model * BYTES_ACT * 2 * (tp - 1) / max(tp, 1)
+    tp_comm = ar_bytes / chip.intra_node_bw if tp > 1 else 0.0
+    return LayerProfile(
+        t_fwd=t_fwd_compute + tp_comm,
+        t_bwd=2 * t_fwd_compute + 2 * tp_comm,
+        t_recomp=t_fwd_compute + tp_comm,
+        tp_comm=tp_comm,
+        layer_param_bytes=params * 2 / tp,
+        act_bytes=ACT_FACTOR * seq_len * d_model * BYTES_ACT / tp,
+        act_boundary_bytes=ACT_BOUNDARY * seq_len * d_model * BYTES_ACT,
+    )
+
+
+def analytic_layer_profile(chip: ChipSpec, cfg: ModelConfig, tp: int,
+                           seq_len: int) -> LayerProfile:
+    """The analytic stand-in for the paper's hardware auto-profiler
+    (memoized — the search calls this millions of times)."""
+    return _analytic_layer_profile_cached(
+        chip, cfg.name, tp, seq_len, layer_flops_per_token(cfg) * seq_len,
+        layer_param_count(cfg), cfg.d_model)
+
+
+
+
+def update_time(chip: ChipSpec, cfg: ModelConfig, tp: int, dp: int,
+                layers: float, *, overlap: float = 0.7) -> float:
+    """Per-stage optimizer step + the non-overlapped part of grad sync
+    (ZeRO-1 reduce-scatter + all-gather over the DP group crosses nodes)."""
+    if dp <= 1:
+        return 1e-4
+    grad_bytes = layers * layer_param_count(cfg) * 2 / tp
+    sync = 2 * grad_bytes * (dp - 1) / dp / chip.nic_bw
+    return sync * (1.0 - overlap) + 1e-4
+
+
+def offload_time(chip: ChipSpec, cfg: ModelConfig, tp: int,
+                 layers: float, deficit_bytes: float) -> float:
+    """Chip D's CPU-offload mode: the memory deficit must cross PCIe twice
+    per microbatch (out + in), bounded by the optimizer-state working set."""
+    if deficit_bytes <= 0:
+        return 0.0
+    return 2 * deficit_bytes / chip.pcie_bw
+
+
+# ---------------------------------------------------------------------------
+# measured profiles (real-hardware path of the same auto-profiler API)
+# ---------------------------------------------------------------------------
+
+def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3
+                          ) -> Dict[str, float]:
+    """Wall-clock layer profile of the real JAX model on the local backend.
+
+    This is what the auto-profiler runs per chip type on a real cluster; on
+    CPU it is only used by tests (shape of the data, not absolute numbers).
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..models import transformer as tfm
+    from ..models.config import reduced
+
+    small = reduced(cfg)
+    key = jax.random.PRNGKey(0)
+    blk = tfm.init_block(key, small, "dense" if not small.is_moe else "moe")
+    x = jax.random.normal(key, (1, min(seq_len, 256), small.d_model),
+                          dtype=jnp.bfloat16)
+
+    fwd = jax.jit(lambda p, x: tfm.block_forward(
+        p, small, x, "dense" if not small.is_moe else "moe")[0])
+    fwd(blk, x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fwd(blk, x).block_until_ready()
+    t_fwd = (time.perf_counter() - t0) / iters
+
+    grad = jax.jit(jax.grad(lambda p, x: fwd(p, x).astype(jnp.float32).sum()))
+    grad(blk, x)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(grad(blk, x))
+    t_bwd = (time.perf_counter() - t0) / iters
+    return {"t_fwd": t_fwd, "t_bwd": t_bwd, "t_recomp": t_fwd}

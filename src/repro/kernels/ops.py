@@ -1,0 +1,69 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Models call these through ``backend="pallas"``; on non-TPU hosts the kernels
+execute in interpret mode (same kernel body, Python evaluation) so the whole
+model path is testable on CPU.  Wrappers handle GQA expansion, sequence
+padding to block multiples, and dtype plumbing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+
+
+def _is_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def _pad_seq(x, multiple, axis):
+    S = x.shape[axis]
+    pad = (-S) % multiple
+    if not pad:
+        return x, S
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), S
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — expands GQA internally."""
+    H = q.shape[2]
+    if k.shape[2] != H:
+        rep = H // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(_fa.DEFAULT_BLOCK_Q, max(q.shape[1], 1))
+    bk = min(_fa.DEFAULT_BLOCK_K, max(k.shape[1], 1))
+    q, Sq = _pad_seq(q, bq, 1)
+    k, Sk = _pad_seq(k, bk, 1)
+    v, _ = _pad_seq(v, bk, 1)
+    # padded k rows must never win the softmax: mask via causal bounds is not
+    # enough for non-causal; rely on causal=True paths or exact multiples.
+    out = _fa.flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, block_q=bq, block_k=bk,
+                              interpret=not _is_tpu())
+    return out[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, initial_state=None):
+    """Chunked SSD; signature mirrors models.ssm.ssd_chunked."""
+    del initial_state  # kernel starts from zero state (prefill/train path)
+    y, fin = _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=not _is_tpu())
+    return y, fin
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    return _rn.rmsnorm(x, scale, interpret=not _is_tpu())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract:
+numerics ground truth, no tiling, no VMEM concerns)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q/k/v: (B, Sq/Sk, H, hd), K/V already expanded to H heads."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, initial_state=None):
+    """Sequential (non-chunked) SSD recurrence — the simplest possible
+    ground truth for the ssd_scan kernel AND for models/ssm.ssd_chunked.
+
+    x: (b, S, h, p); dt: (b, S, h); A: (h,); Bm/Cm: (b, S, g, n).
+    Returns (y (b, S, h, p), final_state (b, h, p, n)).
+    """
+    b, S, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(A[None, :] * dt_t)               # (b, h)
+        xd = x_t * dt_t[..., None]                       # (b, h, p)
+        state = state * decay[..., None, None] + \
+            jnp.einsum("bhp,bhn->bhpn", xd, B_t)
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None \
+        else initial_state
+    xs = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          Bh.swapaxes(0, 1), Ch.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1), final
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,295 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+MUST be the process entrypoint (``python -m repro.launch.dryrun``): the
+first two lines below force 512 host placeholder devices before jax locks
+the device count.  Do NOT import this module from tests.
+
+For every combination it lowers the right step function (train_step /
+prefill / serve_step) with fully-abstract inputs (ShapeDtypeStruct — zero
+allocation), compiles under GSPMD, and records:
+
+  * ``memory_analysis()``  — proves the per-device working set fits,
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the post-partitioning HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand sizes),
+
+into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ASSIGNED, get_config, canonical           # noqa: E402
+from .hlo_analysis import analyze_hlo                            # noqa: E402
+from ..models import model as M                                  # noqa: E402
+from ..sharding import ctx, rules                                # noqa: E402
+from ..training import serve_step as SS                          # noqa: E402
+from ..training.train_step import (abstract_train_state,         # noqa: E402
+                                   make_train_step)
+from . import shapes as SH                                       # noqa: E402
+from .mesh import make_production_mesh                           # noqa: E402
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand sizes of every collective op in post-optimization HLO."""
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in COLLECTIVE_OPS:
+            # match ` op(` or `-start(` forms, not substrings of other ops
+            om = re.search(rf"\b{op}(-start)?\(", rhs)
+            if not om:
+                continue
+            # operands are inside the call parens; result shape(s) precede it
+            call = rhs[om.end():]
+            depth, end = 1, 0
+            for i, ch in enumerate(call):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args = call[:end]
+            b = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(args))
+            totals[op] += b
+            counts[op] += 1
+            break
+    return totals, counts
+
+
+TRAIN_ACCUM = int(os.environ.get("REPRO_TRAIN_ACCUM", "4"))
+
+# --- §Perf hillclimbing knobs (see EXPERIMENTS.md §Perf) -------------------
+# comma list of ModelConfig field overrides, e.g. "ssm_chunk=128"
+CFG_SET = os.environ.get("REPRO_CFG_SET", "")
+# remat policy: full (default) | dots (save matmul outputs)
+REMAT_POLICY = os.environ.get("REPRO_REMAT_POLICY", "full")
+
+
+def _apply_overrides(cfg):
+    import dataclasses
+    if not CFG_SET:
+        return cfg
+    kv = {}
+    for part in CFG_SET.split(","):
+        k, v = part.split("=")
+        field = {f.name: f for f in dataclasses.fields(cfg)}[k]
+        typ = field.type if callable(field.type) else type(getattr(cfg, k))
+        kv[k] = type(getattr(cfg, k))(v)
+    return dataclasses.replace(cfg, **kv)
+
+
+def _remat_policy():
+    if REMAT_POLICY == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _lower_for(arch: str, shape_name: str, mesh):
+    cfg = _apply_overrides(get_config(arch))
+    shape = SH.SHAPES[shape_name]
+    hybrid = cfg.family == "hybrid"
+
+    if shape.kind == "train":
+        state_shape = abstract_train_state(cfg)
+        state_sh = rules.train_state_shardings(state_shape, mesh, hybrid=hybrid)
+        batch_spec = SH.input_specs(cfg, shape)
+        batch_sh = rules.batch_shardings(batch_spec, mesh)
+        # microbatch so the per-microbatch batch still covers the data axes.
+        # Adaptive accumulation (§Perf hillclimb C): every extra microbatch
+        # re-pays the per-microbatch FSDP grad reduction, so use the fewest
+        # microbatches whose activations still fit the 16 GB budget.
+        data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        n = cfg.param_count()
+        if "REPRO_TRAIN_ACCUM" in os.environ:
+            base_accum = TRAIN_ACCUM
+        elif n > 1e11:
+            base_accum = 16
+        elif n > 5e10:
+            base_accum = 8
+        elif n > 2e10:
+            base_accum = 4
+        elif n > 5e9:
+            base_accum = 2
+        else:
+            base_accum = 1
+        accum = max(1, min(base_accum, shape.global_batch // data))
+        if os.environ.get("REPRO_DP_MODE", "gspmd") == "manual":
+            # manual-collective ZeRO-1 (training/manual_dp.py): one
+            # reduce-scatter + all-gather per param per step
+            from ..training.manual_dp import make_manual_dp_train_step
+            mstep, mstate_sh = make_manual_dp_train_step(
+                cfg, mesh, accum_steps=accum)
+            jitted = jax.jit(mstep, in_shardings=(mstate_sh, batch_sh),
+                             out_shardings=(mstate_sh, None),
+                             donate_argnums=(0,))
+            return jitted.lower(state_shape, batch_spec)
+        step = make_train_step(
+            cfg, accum_steps=accum, remat_policy=_remat_policy(),
+            accum_dtype=os.environ.get("REPRO_ACCUM_DTYPE", "float32"))
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jitted.lower(state_shape, batch_spec)
+
+    params_shape = M.abstract_params(cfg)
+    params_sh = rules.tree_param_shardings(params_shape, mesh, hybrid=hybrid)
+
+    if shape.kind == "prefill":
+        batch_spec = SH.input_specs(cfg, shape)
+        batch_sh = rules.batch_shardings(batch_spec, mesh)
+        fn = SS.make_prefill_step(cfg, cache_len=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        return jitted.lower(params_shape, batch_spec)
+
+    # decode
+    fn, plan = SS.make_decode_step(cfg, shape.seq_len)
+    cache_shape = SS.abstract_serve_cache(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = rules.cache_shardings(cache_shape, mesh)
+    dspec = SH.decode_specs(cfg, shape)
+    tok_sh = rules.batch_shardings({"tokens": dspec["tokens"]}, mesh)["tokens"]
+    pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    jitted = jax.jit(fn, in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                     out_shardings=(None, None, cache_sh),
+                     donate_argnums=(1,))
+    return jitted.lower(params_shape, cache_shape, dspec["tokens"], dspec["pos"])
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+               *, save_hlo: bool = False, tag: str = "") -> dict:
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + \
+        (f"__{tag}" if tag else "")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "tag": tag, "overrides": CFG_SET, "remat_policy": REMAT_POLICY}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with ctx.use_mesh(mesh):
+            lowered = _lower_for(arch, shape_name, mesh)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            } if ma is not None else None
+        except Exception as e:  # CPU backend may not support it
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            rec["cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float))}
+        except Exception as e:
+            rec["cost"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        # trip-count-correct per-device analysis (see hlo_analysis.py)
+        rec["hlo"] = analyze_hlo(hlo)
+        rec["collective_total"] = rec["hlo"]["collective_total"]
+        rec["hlo_lines"] = hlo.count("\n")
+        rec["n_devices"] = mesh.size
+        if save_hlo:
+            with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo"),
+                      "w") as f:
+                f.write(hlo)
+        rec["ok"] = True
+    except ValueError as e:
+        if "sliding-window" in str(e) or "out of scope" in str(e):
+            rec["skipped"] = str(e)
+            rec["ok"] = True   # documented skip, not a failure
+        else:
+            rec["error"] = traceback.format_exc()
+    except Exception:
+        rec["error"] = traceback.format_exc()
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned archs)")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for §Perf variants")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [canonical(args.arch)]
+    shape_names = list(SH.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for sn in shape_names:
+            for mp in meshes:
+                rec = dryrun_one(arch, sn, mp, args.out,
+                                 save_hlo=args.save_hlo, tag=args.tag)
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec["ok"] else "FAIL")
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                flops = rec.get("hlo", {}).get("flops", float("nan"))
+                print(f"[{status:4s}] {arch:24s} {sn:12s} "
+                      f"{'2x16x16' if mp else '16x16':8s} "
+                      f"t={rec['total_s']:7.1f}s flops/dev={flops:.3e} "
+                      f"coll/dev={rec.get('collective_total', 0) / 1e9:.2f}GB",
+                      flush=True)
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Post-optimization HLO text analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (it does not
+multiply by trip count), which makes it useless for scan-over-layers models.
+This module parses ``compiled.as_text()`` into computations + a call graph,
+reads ``known_trip_count`` from while backend_configs, and produces
+trip-count-correct totals:
+
+  * ``flops``            — 2·M·N·K per dot (batch dims included), × trip
+  * ``bytes``            — per-instruction result+operand bytes (fusion
+                           internals excluded), × trip — an HBM-traffic proxy
+  * ``collective_bytes`` — operand bytes per collective op kind, × trip
+  * ``collectives``      — per-op-kind counts and per-instruction detail
+
+This is the "profile" the §Perf hillclimbing loop iterates on (no real TPU
+in this container — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_NAME_RE = re.compile(r"%[\w.\-]+")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+
+def _type_bytes_and_dims(type_str: str) -> Tuple[int, List[List[int]]]:
+    total, dims = 0, []
+    for dt, ds in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in ds.split(",") if x]
+        n = 1
+        for s in shape:
+            n *= s
+        total += n * _DTYPE_BYTES[dt]
+        dims.append(shape)
+    return total, dims
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: List[List[int]]
+    operands: List[str]
+    raw: str
+    trip: int = 1
+    called: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    is_fusion: bool = False
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self.shape_of: Dict[str, Tuple[int, List[List[int]]]] = {}
+        self._parse(text)
+        self._mark_fusions()
+        self.multipliers = self._propagate_multipliers()
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            if s.startswith("HloModule"):
+                continue
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$", s)
+            if m and not line.startswith("  "):
+                cur = Computation(m.group(2), [])
+                self.computations[m.group(2)] = cur
+                if m.group(1):
+                    self.entry = m.group(2)
+                continue
+            if s == "}" or s.startswith("}"):
+                if not line.startswith("  "):
+                    cur = None
+                continue
+            if cur is None:
+                continue
+            inst = self._parse_instruction(s)
+            if inst is not None:
+                cur.instructions.append(inst)
+                self.shape_of[inst.name] = (inst.result_bytes, inst.result_dims)
+
+    def _parse_instruction(self, s: str) -> Optional[Instruction]:
+        m = re.match(r"(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$", s)
+        if not m:
+            return None
+        name, rhs = m.group(1), m.group(2)
+        # split type part from opcode: type is either "(tuple...)" or "t[dims]{layout}"
+        rhs = rhs.lstrip()
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        type_str, rest = rhs[:i + 1], rhs[i + 1:]
+                        break
+            else:
+                return None
+        else:
+            om = re.match(r"([\w\[\],{}\d]+)\s", rhs)
+            if not om:
+                return None
+            type_str, rest = om.group(1), rhs[om.end():]
+        rest = rest.lstrip()
+        om = re.match(r"([\w\-]+)\(", rest)
+        if not om:
+            return None
+        opcode = om.group(1)
+        call = rest[om.end():]
+        depth, end = 1, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args, attrs = call[:end], call[end + 1:]
+        operands = [n[1:] for n in _NAME_RE.findall(args)]
+        called = []
+        for key in ("condition", "body", "calls", "to_apply"):
+            for cm in re.finditer(rf"{key}=%?([\w.\-]+)", attrs):
+                called.append((key, cm.group(1)))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+        if bm:
+            for n in _NAME_RE.findall(bm.group(1)):
+                called.append(("branch", n[1:]))
+        trip = 1
+        tm = _TRIP_RE.search(attrs)
+        if tm:
+            trip = int(tm.group(1))
+        rb, rd = _type_bytes_and_dims(type_str)
+        return Instruction(name, opcode, rb, rd, operands, s, trip,
+                           tuple(called))
+
+    def _mark_fusions(self):
+        for comp in self.computations.values():
+            for inst in comp.instructions:
+                if inst.opcode == "fusion":
+                    for kind, cname in inst.called:
+                        if kind == "calls" and cname in self.computations:
+                            self.computations[cname].is_fusion = True
+
+    def _propagate_multipliers(self) -> Dict[str, int]:
+        mult: Dict[str, int] = {}
+        if self.entry is None:
+            return mult
+
+        def visit(cname: str, m: int):
+            if cname not in self.computations:
+                return
+            mult[cname] = mult.get(cname, 0) + m
+            for inst in self.computations[cname].instructions:
+                for kind, sub in inst.called:
+                    sub_m = m * (inst.trip if inst.opcode == "while" else 1)
+                    visit(sub, sub_m)
+
+        visit(self.entry, 1)
+        return mult
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, comp: Computation, inst: Instruction) -> int:
+        total = 0
+        for op in inst.operands:
+            if op in self.shape_of:
+                total += self.shape_of[op][0]
+        return total
+
+    def _dot_flops(self, comp: Computation, inst: Instruction) -> int:
+        # result elems:
+        out = 1
+        for d in (inst.result_dims[0] if inst.result_dims else []):
+            out *= d
+        # contraction size from lhs shape + lhs_contracting_dims
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.raw)
+        k = 1
+        if cm and inst.operands:
+            lhs = inst.operands[0]
+            if lhs in self.shape_of and self.shape_of[lhs][1]:
+                lshape = self.shape_of[lhs][1][0]
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lshape):
+                        k *= lshape[int(idx)]
+        return 2 * out * k
+
+    def analyze(self) -> Dict[str, object]:
+        flops = 0
+        bytes_ = 0
+        coll_bytes = {k: 0 for k in COLLECTIVE_OPS}
+        coll_tpu = {k: 0 for k in COLLECTIVE_OPS}
+        coll_counts = {k: 0 for k in COLLECTIVE_OPS}
+        coll_detail = []
+        skip_bytes_ops = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                          "constant", "iota", "after-all", "partition-id",
+                          "replica-id"}
+        for cname, comp in self.computations.items():
+            m = self.multipliers.get(cname, 0)
+            if m == 0:
+                continue
+            for inst in comp.instructions:
+                if inst.opcode == "dot":
+                    flops += m * self._dot_flops(comp, inst)
+                if not comp.is_fusion and inst.opcode not in skip_bytes_ops:
+                    bytes_ += m * (inst.result_bytes +
+                                   self._operand_bytes(comp, inst))
+                base = inst.opcode.replace("-start", "")
+                if base in COLLECTIVE_OPS and not inst.opcode.endswith("-done"):
+                    ob = self._operand_bytes(comp, inst)
+                    # XLA:CPU float-normalization rewrites bf16 all-reduces
+                    # to f32 (reducer named *_promoted); a TPU executes them
+                    # natively in bf16 — report the adjusted bytes too.
+                    promoted = "_promoted" in inst.raw
+                    coll_bytes[base] += m * ob
+                    coll_tpu[base] += m * (ob // 2 if promoted else ob)
+                    coll_counts[base] += m
+                    coll_detail.append({
+                        "op": base, "name": inst.name, "comp": cname,
+                        "mult": m, "operand_bytes": ob,
+                        "bf16_promoted": promoted,
+                    })
+        return {
+            "flops": int(flops),
+            "bytes": int(bytes_),
+            "collective_bytes": coll_bytes,
+            "collective_counts": coll_counts,
+            "collective_total": int(sum(coll_bytes.values())),
+            "collective_total_tpu": int(sum(coll_tpu.values())),
+            "collective_detail": sorted(
+                coll_detail, key=lambda d: -d["mult"] * d["operand_bytes"])[:40],
+        }
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    return HloModule(text).analyze()

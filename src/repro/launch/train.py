@@ -1,0 +1,97 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1p5_0p5b \
+        --steps 100 --batch 8 --seq 256 [--model-parallel 1] [--accum 1] \
+        [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
+
+Uses whatever devices exist (CPU/TPU); on a real TPU fleet the same flags
+drive the production mesh.  ``--smoke`` selects the reduced config family.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpointing.io import load_checkpoint, save_checkpoint
+from ..configs import canonical, get_config, get_smoke_config, list_configs
+from ..data.pipeline import DataConfig, make_loader
+from ..optim.adamw import AdamWConfig
+from ..sharding import ctx, rules
+from ..training.train_step import (abstract_train_state, make_train_state,
+                                   make_train_step)
+from .mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs() + ["all"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    name = canonical(args.arch)
+    cfg = get_smoke_config(name) if args.smoke else get_config(name)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params~{cfg.param_count() / 1e6:.1f}M devices={len(jax.devices())}")
+
+    mesh = make_local_mesh(model=args.model_parallel)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 5))
+
+    with ctx.use_mesh(mesh):
+        state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
+        state_sh = rules.train_state_shardings(
+            jax.eval_shape(lambda: state), mesh,
+            hybrid=cfg.family == "hybrid")
+        state = jax.device_put(state, state_sh)
+        # no donation here: eagerly-initialized zeros/ones can alias the same
+        # buffer across leaves (jnp constant caching), which XLA rejects for
+        # donated args; the dry-run path (abstract inputs) does donate.
+        step_fn = jax.jit(make_train_step(cfg, opt, accum_steps=args.accum))
+
+        dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
+                          seed=1234 + args.seed)
+        loader = make_loader(cfg, dcfg)
+
+        if args.ckpt_dir:
+            from ..checkpointing.io import checkpoint_step
+            if checkpoint_step(args.ckpt_dir) is not None:
+                state = load_checkpoint(args.ckpt_dir,
+                                        jax.eval_shape(lambda: state))
+                print(f"resumed from {args.ckpt_dir} at step {int(state.step)}")
+
+        tokens_per_step = args.batch * args.seq
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            batch = next(loader)
+            state, m = step_fn(state, batch)
+            if (i + 1) % args.log_every == 0 or i == 0:
+                dt = time.perf_counter() - t0
+                tgs = tokens_per_step * (i + 1) / dt / len(jax.devices())
+                print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
+                      f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f} "
+                      f"TGS={tgs:.0f}", flush=True)
+            if args.ckpt_dir and args.ckpt_every and \
+                    (i + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, state, step=i + 1)
+        loader.close()
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, state, step=args.steps)
+            print(f"checkpoint saved to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts block with sort-based capacity dispatch.
+
+Dispatch algorithm (per token group; groups are the data-sharded leading dim
+so dispatch itself is communication-free and the expert matmul induces the
+expert-parallel collective over the ``model`` axis):
+
+  1. router logits -> top-k (gate values + expert ids) per token
+  2. flatten the (tokens × k) assignments, stable-argsort by expert id
+  3. position-within-expert via cumulative counts; slots beyond capacity C
+     are dropped (standard GShard/Switch semantics)
+  4. scatter tokens into an (E, C, d) buffer, run batched expert MLPs,
+     gather back and combine weighted by the gate values.
+
+FLOP cost is exactly the active-expert FLOPs (plus O(tokens·E) router math);
+no one-hot dispatch einsum is ever materialized.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from ..sharding.ctx import constrain
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": layers.dense_init(ks[0], (d, E), 0, jnp.float32)}
+    if cfg.mlp in ("swiglu", "geglu", "glu"):
+        p["wi"] = layers.dense_init(ks[1], (E, d, ff), 1, dtype)
+        p["wg"] = layers.dense_init(ks[2], (E, d, ff), 1, dtype)
+        p["wo"] = layers.dense_init(ks[3], (E, ff, d), 1, dtype)
+    else:
+        p["wi"] = layers.dense_init(ks[1], (E, d, ff), 1, dtype)
+        p["wo"] = layers.dense_init(ks[3], (E, ff, d), 1, dtype)
+    return p
+
+
+def capacity(cfg, group_tokens: int) -> int:
+    """Per-expert capacity for a token group."""
+    k, E, cf = cfg.experts_per_token, cfg.num_experts, cfg.moe_capacity_factor
+    c = int(math.ceil(k * group_tokens * cf / E))
+    return max(4, min(c, group_tokens * k))
+
+
+def _dispatch_one_group(x, gate_vals, expert_ids, E: int, C: int):
+    """x: (g, d); gate_vals/expert_ids: (g, k).  Returns
+    (buffer (E*C, d), slot (g*k,), valid (g*k,))."""
+    g, k = expert_ids.shape
+    flat_ids = expert_ids.reshape(g * k)
+    # stable sort by expert id; ties keep token order
+    sort_idx = jnp.argsort(flat_ids, stable=True)            # (gk,)
+    sorted_ids = flat_ids[sort_idx]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_ids].add(1)  # (E,)
+    starts = jnp.cumsum(counts) - counts                     # (E,)
+    pos_in_expert = jnp.arange(g * k, dtype=jnp.int32) - starts[sorted_ids]
+    valid_sorted = pos_in_expert < C
+    slot_sorted = jnp.where(valid_sorted, sorted_ids * C + pos_in_expert, E * C)
+    # invert the permutation: slot for original flat index j
+    inv = jnp.argsort(sort_idx, stable=True)
+    slot = slot_sorted[inv]                                  # (gk,)
+    valid = valid_sorted[inv]
+    tok_idx = jnp.arange(g * k, dtype=jnp.int32) // k
+    buf = jnp.zeros((E * C + 1, x.shape[-1]), x.dtype)
+    buf = buf.at[slot].add(x[tok_idx] * valid[:, None].astype(x.dtype))
+    return buf[: E * C], slot, valid
+
+
+def _combine_one_group(ybuf, slot, valid, gate_vals):
+    """ybuf: (E*C, d); slot/valid: (g*k,); gate_vals: (g, k) -> (g, d)."""
+    g, k = gate_vals.shape
+    safe_slot = jnp.where(valid, slot, 0)
+    out = ybuf[safe_slot] * valid[:, None].astype(ybuf.dtype)   # (gk, d)
+    out = out.reshape(g, k, -1)
+    return jnp.sum(out * gate_vals[..., None].astype(ybuf.dtype), axis=1)
+
+
+def moe_block(params, cfg, x) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (y (B, S, d), metrics dict incl. aux losses).
+
+    Token groups = the batch dim (sharded over data), so per-group work is
+    local; the expert matmul contracts against expert-sharded weights.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+
+    xg = x  # (B=groups, g=S, d)
+    logits = (xg.astype(jnp.float32) @ params["router"])       # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (B, S, k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    buf, slot, valid = jax.vmap(
+        lambda xx, gv, ei: _dispatch_one_group(xx, gv, ei, E, C)
+    )(xg, gate_vals, expert_ids)
+    # buf: (B, E*C, d) -> (B, E, C, d)
+    # (§Perf note: forcing an extra token-local constrain here was tried and
+    # REFUTED — it added an explicit reshard on top of GSPMD's choice and
+    # grew collective bytes 15%; see EXPERIMENTS.md §Perf hillclimb A.)
+    buf = buf.reshape(B, E, C, d)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    # batched expert MLP; experts sharded over the `model` axis
+    h = jnp.einsum("becd,edf->becf", buf, params["wi"])
+    if cfg.mlp in ("swiglu", "glu"):
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["wg"])) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, params["wg"]),
+                        approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    ybuf = jnp.einsum("becf,efd->becd", h, params["wo"])
+    ybuf = constrain(ybuf, "batch", "expert", None, None)
+    ybuf = ybuf.reshape(B, E * C, d)
+
+    y = jax.vmap(_combine_one_group)(ybuf, slot, valid, gate_vals)
+
+    # --- aux losses (Switch-style load balance + router z-loss) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    drop_frac = 1.0 - jnp.mean(valid.astype(jnp.float32))
+    metrics = {
+        "moe_aux_loss": aux * cfg.router_aux_coef,
+        "moe_z_loss": z * cfg.router_z_coef,
+        "moe_drop_frac": drop_frac,
+    }
+    return y, metrics
+
+
+# ---------------------------------------------------------------------------
+# reference oracle (loop over experts, no capacity) for tests
+# ---------------------------------------------------------------------------
+
+def moe_reference(params, cfg, x):
+    """Dense loop-over-experts oracle with unlimited capacity."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(x)
+    for e in range(E):
+        h = x @ params["wi"][e]
+        if cfg.mlp in ("swiglu", "glu"):
+            h = jax.nn.silu(x @ params["wg"][e]) * h
+        elif cfg.mlp == "geglu":
+            h = jax.nn.gelu(x @ params["wg"][e], approximate=True) * h
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+        ye = h @ params["wo"][e]
+        w = jnp.sum(jnp.where(expert_ids == e, gate_vals, 0.0), axis=-1)
+        y = y + ye * w[..., None].astype(x.dtype)
+    return y

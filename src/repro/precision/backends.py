@@ -1,0 +1,108 @@
+"""Simulated chip backends for precision alignment (DiTorch §3.1.2).
+
+The paper's DiTorch aligns numerics across vendor chips that differ in
+dtype support, data layouts, and accumulation order.  Without vendor
+silicon, each "chip" here is a distinct *numerics regime* applied to the
+same JAX computation — different compute dtypes and different matmul
+accumulation orders (chunked-K accumulation reproduces the paper's
+"unique data layouts and accumulation orders" failure mode exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipBackend:
+    name: str
+    compute_dtype: str          # matmul input dtype
+    accum_chunks: int = 1       # K-dim accumulation chunks (order change)
+    stochastic_eps: float = 0.0  # per-op relative perturbation (layout noise)
+
+
+BACKENDS: Dict[str, ChipBackend] = {
+    "a100_ref": ChipBackend("a100_ref", "float32"),
+    "chip_a": ChipBackend("chip_a", "bfloat16"),
+    "chip_b": ChipBackend("chip_b", "bfloat16", accum_chunks=4),
+    "chip_c": ChipBackend("chip_c", "float16"),
+    "chip_d": ChipBackend("chip_d", "float16", accum_chunks=8),
+}
+
+
+def backend_matmul(be: ChipBackend, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Matmul under a backend's dtype + accumulation-order regime."""
+    dt = jnp.dtype(be.compute_dtype)
+    a = a.astype(dt)
+    b = b.astype(dt)
+    if be.accum_chunks <= 1:
+        return jnp.matmul(a, b).astype(jnp.float32)
+    K = a.shape[-1]
+    c = be.accum_chunks
+    while K % c:
+        c -= 1
+    kc = K // c
+    out = jnp.zeros((*a.shape[:-1], b.shape[-1]), jnp.float32)
+    for i in range(c):   # fixed different order: low chunks first
+        ak = a[..., i * kc:(i + 1) * kc]
+        bk = b[..., i * kc:(i + 1) * kc, :]
+        out = out + jnp.matmul(ak, bk).astype(jnp.float32)
+    return out
+
+
+OPS: Dict[str, Callable] = {}
+
+
+def op(name):
+    def deco(f):
+        OPS[name] = f
+        return f
+    return deco
+
+
+@op("matmul")
+def _matmul(be, rng):
+    a = jax.random.normal(rng, (128, 256))
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (256, 128))
+    return backend_matmul(be, a, b)
+
+
+@op("softmax")
+def _softmax(be, rng):
+    x = jax.random.normal(rng, (64, 512)) * 4
+    return jax.nn.softmax(x.astype(be.compute_dtype).astype(jnp.float32), -1)
+
+
+@op("layernorm")
+def _layernorm(be, rng):
+    x = jax.random.normal(rng, (64, 512)).astype(be.compute_dtype)
+    xf = x.astype(jnp.float32)
+    return (xf - xf.mean(-1, keepdims=True)) / jnp.sqrt(
+        xf.var(-1, keepdims=True) + 1e-5)
+
+
+@op("gelu")
+def _gelu(be, rng):
+    x = jax.random.normal(rng, (4096,)).astype(be.compute_dtype)
+    return jax.nn.gelu(x.astype(jnp.float32))
+
+
+@op("attention")
+def _attention(be, rng):
+    ks = jax.random.split(rng, 3)
+    q, k, v = (jax.random.normal(kk, (2, 64, 4, 32)) for kk in ks)
+    s = backend_matmul(
+        be, q.transpose(0, 2, 1, 3).reshape(8, 64, 32),
+        k.transpose(0, 2, 3, 1).reshape(8, 32, 64))
+    p = jax.nn.softmax(s, -1)
+    return backend_matmul(be, p, v.transpose(0, 2, 1, 3).reshape(8, 64, 32))
+
+
+@op("cross_entropy")
+def _ce(be, rng):
+    x = (jax.random.normal(rng, (32, 1000)) * 3).astype(be.compute_dtype)
+    return jax.nn.logsumexp(x.astype(jnp.float32), -1)

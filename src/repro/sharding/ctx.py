@@ -1,0 +1,117 @@
+"""Sharding context: a process-global (mesh, logical-axis-rules) pair.
+
+Model code calls :func:`constrain` with *logical* axis names; when a mesh is
+active the logical names are translated to mesh axes and a
+``with_sharding_constraint`` is emitted; otherwise it is a no-op, so the same
+model code runs on a laptop and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical axis -> mesh axis (or tuple of mesh axes, or None) mapping.
+# "batch" spans the data-parallel axes; "model" is tensor/expert parallel.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_model": "model",     # sequence-parallel activations between blocks
+    "model": "model",
+    "heads": "model",         # attention heads (megatron attention)
+    "expert": "model",
+    "data_only": "data",
+    "none": None,
+}
+
+
+def axis_size(name: str) -> int:
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    return mesh.shape.get(name, 1)
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev_mesh, prev_rules = get_mesh(), get_rules()
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh(prev_mesh, prev_rules)
+
+
+def _resolve(axis: Optional[str], mesh: Mesh, dim_size: int):
+    """Translate a logical axis name into mesh axes, dropping it if the
+    dimension is not divisible by the product of mesh axis sizes."""
+    if axis is None:
+        return None
+    rules = get_rules()
+    mapped = rules.get(axis, None)
+    if mapped is None:
+        return None
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if dim_size % total != 0:
+        # try dropping trailing axes until divisible
+        while axes:
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if dim_size % total == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                    mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or get_mesh()
+    assert mesh is not None
+    assert len(axes) == len(shape), (axes, shape)
+    return P(*[_resolve(a, mesh, s) for a, s in zip(axes, shape)])
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint; no-op without an active mesh.
+
+    Inside a (partial-manual) ``shard_map`` the constraint must be built
+    against the *current abstract mesh* (whose manual axes carry different
+    axis types), not the concrete mesh captured at setup."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh)
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
+    except (AttributeError, TypeError):
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,208 @@
+"""Parameter / optimizer-state / batch / cache sharding rules.
+
+Rules are name- and shape-based with a divisibility-aware fallback: if a dim
+is not divisible by the mesh axes assigned to it, axes are dropped (never an
+error) — this is what lets one rule set cover ten architectures whose head /
+expert / vocab counts vary wildly.
+
+Scheme (2D "FSDP x TP", strictly stronger than the paper's ZeRO-1):
+  * big matmul weights: one dim over ``model`` (TP), another over ``data``
+    (FSDP) when divisible;
+  * stacked layer params have a leading layer dim -> never sharded;
+  * MoE expert weights: experts over ``model`` (expert parallelism), d_ff
+    over ``data``;
+  * embeddings / lm head: vocab over ``model``, d_model over ``data``;
+  * optimizer state inherits the param spec (ZeRO-1: the fp32 master/m/v are
+    sharded at least as much as params, over ``data`` wherever possible).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+DATA_AXES = ("pod", "data")   # flattened into the batch dim
+MODEL_AXIS = "model"
+
+
+def _fits(dim: int, mesh: Mesh, axes: Sequence[str]) -> bool:
+    total = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        total *= mesh.shape[a]
+    return dim % total == 0 and dim >= total
+
+
+def _axis(mesh: Mesh, dim: int, *cands: Any) -> Optional[Any]:
+    """First candidate (axis name or tuple) that divides ``dim``."""
+    for c in cands:
+        axes = (c,) if isinstance(c, str) else tuple(c)
+        if _fits(dim, mesh, axes):
+            return c if isinstance(c, str) else tuple(axes)
+    return None
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               *, stacked_prefix: int = 0, fsdp: bool = True) -> P:
+    """Infer a PartitionSpec for one parameter.
+
+    ``stacked_prefix``: number of leading stacked-layer dims (unsharded).
+    """
+    da = data_axes(mesh)
+    specs: list = [None] * len(shape)
+    body = shape[stacked_prefix:]
+    off = stacked_prefix
+    name = path.split("/")[-1]
+
+    def set_dim(i, axis):
+        if axis is not None:
+            specs[off + i] = axis
+
+    if len(body) == 0:
+        return P(*specs)
+
+    if name in ("tok", "head"):  # embeddings: (V, d) or (d, V)
+        big = 0 if body[0] >= body[-1] else len(body) - 1
+        small = len(body) - 1 - big
+        set_dim(big, _axis(mesh, body[big], MODEL_AXIS))
+        if fsdp and len(body) > 1:
+            set_dim(small, _axis(mesh, body[small], da))
+        return P(*specs)
+
+    if re.search(r"moe/(wi|wg|wo)$", path) or \
+            (len(body) == 3 and name in ("wi", "wg", "wo")):
+        # (E, d, ff) / (E, ff, d): experts over model, widest other dim over data
+        set_dim(0, _axis(mesh, body[0], MODEL_AXIS))
+        if fsdp:
+            big = 1 if body[1] >= body[2] else 2
+            set_dim(big, _axis(mesh, body[big], da))
+        return P(*specs)
+
+    if len(body) == 2:
+        # generic matmul weight: prefer sharding ff/output dim over model.
+        # column-parallel (d, ff): model on dim1; row-parallel (ff, d): model
+        # on dim0.  Heuristic: model axis on the *larger* dim, data on other.
+        big = 0 if body[0] > body[1] else 1
+        other = 1 - big
+        set_dim(big, _axis(mesh, body[big], MODEL_AXIS))
+        if fsdp:
+            set_dim(other, _axis(mesh, body[other], da))
+        elif specs[off + big] is None:
+            set_dim(other, _axis(mesh, body[other], MODEL_AXIS))
+        return P(*specs)
+
+    if len(body) == 1:
+        # biases / norms / A_log etc: shard big vectors over model
+        if body[0] >= 4096:
+            set_dim(0, _axis(mesh, body[0], MODEL_AXIS))
+        return P(*specs)
+
+    return P(*specs)
+
+
+def _stacked_depth(path: str) -> int:
+    """Leading stacked dims: blocks have 1 (layers), hybrid blocks have 2."""
+    if "blocks" in path:
+        return 2 if path.startswith("blocks-hybrid") else 1
+    return 0
+
+
+def tree_param_specs(params: PyTree, mesh: Mesh, *, hybrid: bool = False,
+                     fsdp: bool = True) -> PyTree:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = {}
+
+    def spec_for(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        stacked = 0
+        if "blocks" in path and "shared_attn" not in path:
+            stacked = 2 if (hybrid and not path.startswith("enc")) else 1
+        return param_spec(path, leaf.shape, mesh, stacked_prefix=stacked,
+                          fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def tree_param_shardings(params: PyTree, mesh: Mesh, **kw) -> PyTree:
+    specs = tree_param_specs(params, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train-state / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def train_state_shardings(state_shape, mesh: Mesh, *, hybrid=False,
+                          fsdp=True):
+    """Shardings for TrainState(params, opt_state{master,m,v}, step)."""
+    from ..training.train_step import TrainState
+    p = tree_param_shardings(state_shape.params, mesh, hybrid=hybrid, fsdp=fsdp)
+    return TrainState(
+        params=p,
+        opt_state={"master": p, "m": p, "v": p},
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    da = data_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        ax = _axis(mesh, b, da, da[:1] if da else None)
+        rest = [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(ax, *rest))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh):
+    """KV caches (L, B, KV, S, hd): batch over data, seq over model.
+    SSM states (L, B, H, p, n): batch over data, heads over model."""
+    da = data_axes(mesh)
+
+    def spec(leaf):
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 4:
+            # find batch dim: first dim after stacked layer dims. KV caches
+            # are (L,B,KV,S,hd) or (L,B,S,KV,hd); ssm (L,B,H,p,n) or conv
+            # (L,B,W,C).
+            s[1] = _axis(mesh, leaf.shape[1], da, da[:1] if da else None)
+            if leaf.ndim == 5:
+                # prefer sharding the KV-heads dim over model (keeps the
+                # per-token dynamic cache update shard-local); fall back to
+                # the longest trailing dim (sequence) when heads don't
+                # divide — flash-decode-style partial softmax handles it
+                if _fits(leaf.shape[2], mesh, (MODEL_AXIS,)) and \
+                        leaf.shape[2] >= mesh.shape[MODEL_AXIS]:
+                    s[2] = MODEL_AXIS
+                else:
+                    trail = list(range(2, 5))
+                    big = max(trail, key=lambda i: leaf.shape[i])
+                    s[big] = _axis(mesh, leaf.shape[big], MODEL_AXIS)
+        elif leaf.ndim >= 2:
+            s[1] = _axis(mesh, leaf.shape[1], da, da[:1] if da else None) \
+                if leaf.ndim > 2 else None
+            if s[1] is None and leaf.ndim >= 2:
+                s[0] = _axis(mesh, leaf.shape[0], da, da[:1] if da else None)
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, cache_shape)

@@ -1,0 +1,215 @@
+"""Manual-collective data parallelism (beyond-paper §Perf extension).
+
+Under plain GSPMD, FSDP-sharded weight gradients are reduced across the
+data axis once per microbatch *per layer* (see EXPERIMENTS.md §Perf C) —
+for a 100B dense model that is terabytes of all-reduce per step.  This
+module implements the textbook ZeRO-1 schedule with explicit collectives
+inside ``jax.shard_map`` (manual over the data axes, GSPMD-auto over
+``model``):
+
+  1. each data shard accumulates LOCAL gradients over its microbatches
+     (zero cross-data traffic),
+  2. one ``psum_scatter`` (reduce-scatter) per parameter at step end,
+  3. the optimizer updates only the local shard of (master, m, v),
+  4. one ``all_gather`` rebuilds the bf16 params.
+
+Total traffic: 2×|params| bytes per step — independent of depth and
+microbatch count.  Applicability: params must fit replicated over the data
+axes (model-sharded only), i.e. sub-~30B models on 16 GB chips; larger
+models keep the GSPMD FSDP path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..sharding import ctx, rules
+from .train_step import TrainState
+
+PyTree = Any
+
+# inside the manual-DP region the batch is already local: "batch" rules are
+# identity; model-axis rules stay active (GSPMD-auto handles them)
+MANUAL_RULES = {
+    "batch": None, "seq": None, "seq_model": "model", "model": "model",
+    "heads": "model", "expert": "model", "data_only": None, "none": None,
+}
+
+
+def _scatter_dim(shape: Tuple[int, ...], dp: int) -> Optional[int]:
+    """First dim divisible by the data-parallel degree (ZeRO-1 shard dim)."""
+    for i, s in enumerate(shape):
+        if s >= dp and s % dp == 0:
+            return i
+    return None
+
+
+def make_manual_dp_train_step(cfg: ModelConfig, mesh: Mesh,
+                              opt_cfg: Optional[adamw.AdamWConfig] = None,
+                              *, accum_steps: int = 1, remat: bool = True,
+                              backend: str = "auto"):
+    """Returns (train_step, state_shardings).
+
+    ``train_step(state, batch)`` matches the GSPMD path's contract but
+    performs the data-parallel gradient reduction manually: one
+    reduce-scatter + one all-gather per parameter per step (ZeRO-1)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    da = rules.data_axes(mesh)
+    dp = 1
+    for a in da:
+        dp *= mesh.shape[a]
+    axis = da if len(da) > 1 else da[0]
+
+    params_shape = M.abstract_params(cfg)
+    scatter_dims = jax.tree.map(lambda l: _scatter_dim(l.shape, dp),
+                                params_shape)
+    treedef = jax.tree_util.tree_structure(params_shape)
+
+    def lf(p, b):
+        return M.loss_fn(p, cfg, b, remat=remat, backend=backend, sp=True)
+
+    def step_fn(params, opt_state, step, batch):
+        # ---- local gradient accumulation (no cross-data traffic) --------
+        with ctx.use_mesh(mesh, MANUAL_RULES):
+            if accum_steps == 1:
+                (loss, _), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, batch)
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum_steps,
+                                        x.shape[0] // accum_steps,
+                                        *x.shape[1:]), batch)
+                gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+
+                def body(c, mb):
+                    g_acc, l_acc = c
+                    (l, _), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                (grads, loss_s), _ = jax.lax.scan(
+                    body, (gz, jnp.float32(0)), mbs)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss = loss_s / accum_steps
+        loss = jax.lax.pmean(loss, axis)
+
+        flat_g = treedef.flatten_up_to(grads)
+        flat_dim = treedef.flatten_up_to(scatter_dims)
+
+        # ---- one reduce-scatter per parameter ----------------------------
+        g_shards = []
+        for g, dim in zip(flat_g, flat_dim):
+            if dim is None:
+                g_shards.append(jax.lax.pmean(g, axis))
+            else:
+                g_shards.append(jax.lax.psum_scatter(
+                    g, axis, scatter_dimension=dim, tiled=True) / dp)
+
+        # global grad norm from the shards (scattered leaves partition the
+        # global tensor exactly once; replicated leaves counted locally)
+        sq_scat = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g, d in zip(g_shards, flat_dim) if d is not None)
+        sq_repl = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g, d in zip(g_shards, flat_dim) if d is None)
+        gnorm = jnp.sqrt(jax.lax.psum(sq_scat, axis) + sq_repl + 1e-20)
+        scale = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9)) \
+            if opt_cfg.grad_clip > 0 else jnp.float32(1.0)
+
+        # ---- shard-local AdamW update + params all-gather ----------------
+        lr = adamw.lr_at(opt_cfg, step)
+        b1, b2 = opt_cfg.b1, opt_cfg.b2
+        bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+        bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+        new_p, new_ms, new_m, new_v = [], [], [], []
+        for g_sh, ms, m, v, p, dim in zip(
+                g_shards, treedef.flatten_up_to(opt_state["master"]),
+                treedef.flatten_up_to(opt_state["m"]),
+                treedef.flatten_up_to(opt_state["v"]),
+                treedef.flatten_up_to(params), flat_dim):
+            g = g_sh.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + opt_cfg.eps)
+            if opt_cfg.weight_decay:
+                delta = delta + opt_cfg.weight_decay * ms
+            ms2 = ms - lr * delta
+            if dim is None:
+                p2 = ms2.astype(p.dtype)
+            else:
+                p2 = jax.lax.all_gather(ms2.astype(p.dtype), axis,
+                                        axis=dim, tiled=True)
+            new_p.append(p2)
+            new_ms.append(ms2)
+            new_m.append(m2)
+            new_v.append(v2)
+
+        unflat = jax.tree_util.tree_unflatten
+        return (unflat(treedef, new_p),
+                {"master": unflat(treedef, new_ms),
+                 "m": unflat(treedef, new_m), "v": unflat(treedef, new_v)},
+                {"loss": loss, "grad_norm": gnorm, "lr": lr})
+
+    # ---- shard_map wiring: manual over data axes, auto over model ---------
+    def manual_spec(leaf, dim):
+        parts = [None] * leaf.ndim
+        if dim is not None:
+            parts[dim] = axis
+        return P(*parts)
+
+    opt_manual = jax.tree.map(manual_spec, params_shape, scatter_dims)
+    param_manual = jax.tree.map(lambda _: P(), params_shape)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        bspec = jax.tree.map(lambda _: P(axis), batch)
+        f = jax.shard_map(
+            step_fn, mesh=mesh,
+            in_specs=(param_manual,
+                      {"master": opt_manual, "m": opt_manual,
+                       "v": opt_manual},
+                      P(), bspec),
+            out_specs=(param_manual,
+                       {"master": opt_manual, "m": opt_manual,
+                        "v": opt_manual},
+                       P()),
+            check_vma=False,
+            axis_names=set(da),
+        )
+        # NOTE: partial-manual shard_map (manual over data, GSPMD-auto over
+        # model) only lowers correctly under jit in jax 0.8
+        new_p, new_opt, metrics = jax.jit(f)(state.params, state.opt_state,
+                                             state.step, batch)
+        return TrainState(new_p, new_opt, state.step + 1), metrics
+
+    # shardings for placing/lowering the state
+    pspecs = rules.tree_param_specs(params_shape, mesh, fsdp=False)
+
+    def full_opt_spec(pspec, leaf, dim):
+        parts = list(pspec) + [None] * (leaf.ndim - len(pspec))
+        if dim is not None:
+            cur = parts[dim]
+            if cur is None:
+                parts[dim] = axis
+            else:
+                cur_t = (cur,) if isinstance(cur, str) else tuple(cur)
+                parts[dim] = tuple(cur_t) + tuple(da)
+        return P(*parts)
+
+    ospecs = jax.tree.map(full_opt_spec, pspecs, params_shape, scatter_dims,
+                          is_leaf=lambda x: isinstance(x, P))
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    state_sh = TrainState(params=p_sh,
+                          opt_state={"master": o_sh, "m": o_sh, "v": o_sh},
+                          step=NamedSharding(mesh, P()))
+    return train_step, state_sh

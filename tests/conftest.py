@@ -1,0 +1,33 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config, get_smoke_config
+from repro.models import model as M
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_batch(cfg, key, batch=2, seq=32, dtype=jnp.float32):
+    kt, ke = jax.random.split(key)
+    b = {"tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            ke, (batch, cfg.num_prefix_tokens, cfg.d_model), dtype=dtype)
+    if cfg.family == "audio":
+        b["audio_embeds"] = jax.random.normal(
+            ke, (batch, cfg.encoder_seq_len, cfg.d_model), dtype=dtype)
+    return b
+
+
+@pytest.fixture(params=ASSIGNED)
+def arch(request):
+    return request.param
+
+
+def exact_cfg(arch_name):
+    """fp32 + no-drop MoE variant of the smoke config, for exactness tests."""
+    cfg = get_smoke_config(arch_name)
+    return dataclasses.replace(cfg, dtype="float32", moe_capacity_factor=8.0)

@@ -1,0 +1,65 @@
+"""Cross-validation: the paper's closed-form cost model (§4.3.2, α-bubble)
+against the event-driven 1F1B simulator — two independent derivations of
+iteration time must agree, plus cache_plan property tests."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import chips, heteroauto, schedule as SCH
+from repro.core.cost_model import evaluate
+from repro.training.serve_step import LONG_THRESHOLD, cache_plan
+
+CFG = get_config("h2_100b")
+
+
+@pytest.mark.parametrize("exp", ["Exp-A-1", "Exp-C-1"])
+def test_cost_model_agrees_with_event_simulator(exp):
+    spec = chips.EXPERIMENTS[exp]
+    groups = chips.cluster(*spec["groups"])
+    r = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                          two_stage=False)
+    assert r.plan is not None
+    # closed form (alpha = 1, 1F1B)
+    closed = r.cost.iter_time
+    # event-driven replay with zero-cost transfers (the closed form has no
+    # P2P term; DiComm latencies are added separately)
+    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(r.plan, CFG, 4096)
+    sim = SCH.simulate_1f1b(tf, tb, b, [0.0] * len(tp2p), t_update=tu)
+    rel = abs(sim.makespan - closed) / closed
+    assert rel < 0.15, (closed, sim.makespan)
+
+
+def test_alpha_zero_is_zero_bubble_lower_bound():
+    spec = chips.EXPERIMENTS["Exp-A-1"]
+    groups = chips.cluster(*spec["groups"])
+    r1 = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                           two_stage=False, alpha=1.0)
+    r0 = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                           two_stage=False, alpha=0.0)
+    # ZB-V (alpha=0) never slower than 1F1B (alpha=1)
+    assert r0.cost.iter_time <= r1.cost.iter_time + 1e-9
+
+
+# --------------------------- cache_plan properties ---------------------------
+
+@given(st.sampled_from(["granite_8b", "starcoder2_7b", "mamba2_780m",
+                        "zamba2_2p7b", "dbrx_132b", "paligemma_3b"]),
+       st.sampled_from([1024, 32768, 524288]))
+@settings(max_examples=20, deadline=None)
+def test_cache_plan_invariants(arch, seq_len):
+    cfg = get_config(arch)
+    plan = cache_plan(cfg, seq_len)
+    if cfg.family == "ssm":
+        assert plan["cache_len"] == 0
+        return
+    assert plan["cache_len"] <= max(seq_len, 1)
+    if seq_len > LONG_THRESHOLD:
+        # sub-quadratic mandate: cache bounded by the window
+        assert plan["ring"] and plan["cache_len"] == cfg.effective_long_window
+    if plan["ring"]:
+        assert plan["window"] == plan["cache_len"]
+    else:
+        assert plan["cache_len"] == seq_len or \
+            (cfg.sliding_window and plan["cache_len"] == cfg.sliding_window)

@@ -1,0 +1,57 @@
+"""Integration: the real dry-run entrypoint (512 virtual devices, production
+mesh) on the cheapest pairs, run as subprocesses so the forced device count
+never leaks into this process.  Marked slow — full 80-combination sweeps are
+driven by `python -m repro.launch.dryrun --arch all --shape all --both-meshes`.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, out, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", out, *extra],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_whisper_decode_single_pod(tmp_path):
+    out = str(tmp_path)
+    r = _run("whisper_base", "decode_32k", out)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rec = json.load(open(os.path.join(
+        out, "whisper_base__decode_32k__pod16x16.json")))
+    assert rec["ok"] and not rec.get("skipped")
+    assert rec["hlo"]["flops"] > 0
+    assert rec["n_devices"] == 256
+    assert rec["memory"]["temp_size_in_bytes"] < 16 * 2 ** 30
+
+
+@pytest.mark.slow
+def test_dryrun_documented_skip(tmp_path):
+    out = str(tmp_path)
+    r = _run("whisper_base", "long_500k", out)
+    assert r.returncode == 0
+    rec = json.load(open(os.path.join(
+        out, "whisper_base__long_500k__pod16x16.json")))
+    assert rec["ok"] and rec.get("skipped")
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_mesh(tmp_path):
+    out = str(tmp_path)
+    r = _run("qwen1p5_0p5b", "long_500k", out, ("--multi-pod",))
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rec = json.load(open(os.path.join(
+        out, "qwen1p5_0p5b__long_500k__pod2x16x16.json")))
+    assert rec["ok"]
+    assert rec["n_devices"] == 512

@@ -1,0 +1,121 @@
+"""HeteroAuto search + cost model: paper-validation (Tables 6/8, Fig 11)
+and hypothesis property tests on plan validity."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import chips, cost_model, heteroauto
+from repro.core.cost_model import ParallelPlan, StagePlan, assign_layers, evaluate
+
+CFG = get_config("h2_100b")
+GBS = 2 * 2 ** 20
+SEQ = 4096
+
+
+def _baseline(name):
+    t6 = chips.TABLE6[name]
+    g = chips.ChipGroup(chips.CHIPS[name], 256)
+    return g, heteroauto.homogeneous_baseline(
+        g, CFG, GBS, SEQ,
+        fixed={"dp": t6["dp"], "tp": t6["tp"], "recompute": t6["recompute"]},
+        allow_offload=True)
+
+
+@pytest.mark.parametrize("name", ["A", "B", "C", "D"])
+def test_homogeneous_tgs_matches_table6(name):
+    """Calibration: modeled homogeneous TGS within 5% of the paper."""
+    _, r = _baseline(name)
+    assert r.plan is not None
+    paper = chips.TABLE6[name]["tgs"]
+    assert abs(r.tgs - paper) / paper < 0.05, (r.tgs, paper)
+
+
+def test_chip_d_requires_offload():
+    """The paper's Table 6 Chip-D configuration only fits with CPU offload."""
+    _, r = _baseline("D")
+    assert any(r.cost.offload)
+
+
+def test_hetero_superlinear_sum_gbs():
+    """Fig 11: with GBS = sum of per-chip GBS, HeteroSpeedupRatio > 100%."""
+    baselines = [_baseline(n) for n in ["A", "B", "C"]]
+    groups = chips.cluster(("A", 256), ("B", 256), ("C", 256))
+    r = heteroauto.search(groups, CFG, 6 * 2 ** 20, SEQ, two_stage=True)
+    assert r.plan is not None
+    ratio = heteroauto.hetero_speedup_ratio(r, baselines)
+    assert ratio > 1.0, ratio          # paper: 109.03%
+
+
+def test_search_overhead_within_table8_band():
+    """Table 8: search completes in seconds, not minutes (vs Metis 600s)."""
+    groups = chips.cluster(("A", 384), ("B", 1024))
+    r = heteroauto.search(groups, CFG, 4 * 2 ** 20, SEQ, two_stage=True)
+    assert r.plan is not None
+    assert r.search_time_s < 60.0
+
+
+def test_memory_descending_stage_order():
+    groups = chips.cluster(("C", 256), ("A", 256), ("B", 256))
+    r = heteroauto.search(groups, CFG, 2 * 2 ** 20, SEQ, two_stage=False)
+    assert r.plan is not None
+    mems = [s.group.spec.memory_bytes for s in r.plan.stages]
+    assert mems == sorted(mems, reverse=True)
+
+
+@given(st.sampled_from(["A", "B", "C", "D"]),
+       st.sampled_from(["A", "B", "C", "D"]),
+       st.sampled_from([128, 256]),
+       st.sampled_from([128, 256, 512]))
+@settings(max_examples=12, deadline=None)
+def test_plan_validity_properties(c1, c2, n1, n2):
+    """Any plan the search returns satisfies the structural invariants:
+    N_i = s_pp,i × s_tp,i × s_dp, Σ l_i = L, per-stage layers >= 1,
+    memory feasible, microbatches × dp = global batch."""
+    groups = [chips.ChipGroup(chips.CHIPS[c1], n1, "g0"),
+              chips.ChipGroup(chips.CHIPS[c2], n2, "g1")]
+    r = heteroauto.search(groups, CFG, GBS, SEQ, two_stage=False)
+    if r.plan is None:
+        return
+    plan, cost = r.plan, r.cost
+    for s in plan.stages:
+        assert s.pp * s.tp * plan.dp == s.group.count
+        assert s.layers >= s.pp
+        assert s.tp & (s.tp - 1) == 0          # power of two
+        assert s.tp <= s.group.spec.tp_max
+    assert sum(s.layers for s in plan.stages) == CFG.num_layers
+    assert plan.microbatches * plan.dp == GBS // SEQ
+    assert cost.feasible
+    assert all(m <= c * 0.92 + 1e-6 for m, c in
+               zip(cost.stage_mem_gb, cost.stage_cap_gb))
+
+
+def test_recompute_reduces_memory_increases_time():
+    g = chips.ChipGroup(chips.CHIPS["B"], 256)
+    base = dict(tp=4, pp=16, layers=96)
+    p_no = ParallelPlan([StagePlan(g, recompute=False, **base)], 4, 128)
+    p_rc = ParallelPlan([StagePlan(g, recompute=True, **base)], 4, 128)
+    c_no = evaluate(p_no, CFG, SEQ, GBS)
+    c_rc = evaluate(p_rc, CFG, SEQ, GBS)
+    assert c_rc.stage_mem_gb[0] < c_no.stage_mem_gb[0]
+    assert c_rc.iter_time > c_no.iter_time
+
+
+def test_assign_layers_balances_compute():
+    groups = chips.cluster(("A", 256), ("C", 256))
+    stages = [StagePlan(groups[0], 4, 16, 0, False),
+              StagePlan(groups[1], 4, 16, 0, False)]
+    out = assign_layers(stages, CFG, SEQ, CFG.num_layers)
+    assert out is not None
+    assert sum(s.layers for s in out) == CFG.num_layers
+    # faster chip A gets more layers than the 4x slower chip C
+    assert out[0].layers > out[1].layers
+
+
+def test_two_stage_refinement_not_worse():
+    groups = chips.cluster(("A", 384), ("B", 1024))
+    r1 = heteroauto.search(groups, CFG, 4 * 2 ** 20, SEQ, two_stage=False)
+    r2 = heteroauto.search(groups, CFG, 4 * 2 ** 20, SEQ, two_stage=True)
+    assert r2.cost.iter_time <= r1.cost.iter_time + 1e-9

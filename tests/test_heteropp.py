@@ -1,0 +1,87 @@
+"""HeteroPP runtime: simulate-mode numerics vs the monolithic model,
+non-uniform layer splits, plan->spec conversion, and the SPMD shard_map
+pipeline (subprocess with virtual devices)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get_config, get_smoke_config
+from repro.core import chips, heteroauto, heteropp as HP
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch,splits", [
+    ("granite_8b", (1, 1)),
+    ("granite_8b", (2, 0)),
+    ("qwen3_moe_30b_a3b", (1, 1)),
+    ("mamba2_780m", (1, 1)),
+])
+def test_simulate_matches_monolithic(arch, splits):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
+                              moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = make_batch(cfg, key, 2, 32)
+    ref, _ = M.forward(params, cfg, batch, remat=False)
+    spec = HP.PipelineSpec(len(splits), splits, microbatches=2)
+    sim, _ = HP.simulate_pipeline_forward(params, cfg, spec, batch)
+    np.testing.assert_allclose(np.asarray(sim), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_split_stage_params_shapes():
+    cfg = get_smoke_config("granite_8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = HP.PipelineSpec(2, (1, 1), microbatches=4)
+    sp, mask = HP.split_stage_params(params, cfg, spec)
+    for leaf in jax.tree.leaves(sp["blocks"]):
+        assert leaf.shape[0] == 2 and leaf.shape[1] == 1
+    assert mask.shape == (2, 1) and bool(mask.all())
+
+
+def test_from_plan_expands_stages():
+    cfg = get_config("h2_100b")
+    groups = chips.cluster(("A", 256), ("B", 256))
+    r = heteroauto.search(groups, cfg, 2 * 2 ** 20, 4096, two_stage=False)
+    assert r.plan is not None
+    spec = HP.from_plan(r.plan)
+    assert spec.total_layers == cfg.num_layers
+    assert spec.num_stages == r.plan.total_pp
+    assert spec.microbatches == r.plan.microbatches
+
+
+def test_manual_dp_zero1_subprocess():
+    """Manual-collective ZeRO-1 (shard_map over data, auto over model):
+    loss/grad-norm/trajectory match the GSPMD step on 8 virtual devices."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    script = os.path.join(tests_dir, "helpers", "run_manual_dp.py")
+    root = os.path.dirname(tests_dir)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "MANUAL_DP_OK" in r.stdout
+
+
+def test_spmd_pipeline_subprocess():
+    """Full shard_map pipeline on 4 virtual devices: loss == monolithic,
+    grads flow through ppermute."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    script = os.path.join(tests_dir, "helpers", "run_spmd_pipeline.py")
+    root = os.path.dirname(tests_dir)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OK" in r.stdout

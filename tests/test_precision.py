@@ -1,0 +1,53 @@
+"""DiTorch-analogue precision alignment (paper §3.1.2, Fig 5, Table 1)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.precision import align, backends as B
+
+
+def test_operator_sweep_runs_all_ops_and_backends():
+    reports = align.operator_sweep()
+    ops = {r.op for r in reports}
+    bes = {r.backend for r in reports}
+    assert ops == set(B.OPS)
+    assert bes == set(B.BACKENDS) - {"a100_ref"}
+
+
+def test_operator_sweep_bf16_within_tolerance():
+    reports = align.operator_sweep()
+    bf16 = [r for r in reports if r.backend in ("chip_a", "chip_b")]
+    assert all(r.passed for r in bf16), \
+        [(r.op, r.backend, r.max_rel_err) for r in bf16 if not r.passed]
+
+
+def test_accumulation_order_changes_results_but_stays_aligned():
+    """Different accumulation orders (the paper's vendor-layout issue) must
+    produce different bits yet pass the alignment criterion."""
+    import jax
+    rng = jax.random.PRNGKey(0)
+    a = jax.random.normal(rng, (64, 256))
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (256, 64))
+    o1 = np.asarray(B.backend_matmul(B.BACKENDS["chip_a"], a, b))
+    o2 = np.asarray(B.backend_matmul(B.BACKENDS["chip_b"], a, b))
+    assert not np.array_equal(o1, o2)           # bitwise different
+    rms = np.sqrt(np.mean(o1 ** 2))
+    rel = np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), rms))
+    assert rel < 5e-2                            # but aligned
+
+
+@pytest.mark.slow
+def test_model_level_mre_below_criterion():
+    """End-to-end: bf16 training loss MRE vs fp32 < 1.5% (paper Table 1:
+    chips A-D achieved 0.391%-1.215% over 300 iters; we run a reduced
+    model/iteration count on CPU)."""
+    cfg = get_smoke_config("qwen1p5_0p5b")
+    mre = align.model_level_alignment(cfg, iters=30, dtypes=["bfloat16"])
+    assert mre["bfloat16"] < align.MRE_CRITERION, mre
+
+
+def test_loss_mre_formula():
+    y = np.array([1.0, 2.0, 4.0])
+    yh = np.array([1.01, 1.98, 4.04])
+    assert abs(align.loss_mre(yh, y) -
+               np.mean([0.01, 0.01, 0.01])) < 1e-12

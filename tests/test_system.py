@@ -1,0 +1,75 @@
+"""End-to-end system behaviour: real training runs where loss decreases,
+the full serve pipeline, and the DiComm/latency paper-validation numbers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import model as M
+from repro.training.train_step import make_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ["qwen1p5_0p5b", "mamba2_780m",
+                                  "qwen3_moe_30b_a3b"])
+def test_training_reduces_loss(arch):
+    """30 steps on the structured synthetic stream must cut the loss
+    markedly below its initial value (the bigram rule is learnable)."""
+    cfg = get_smoke_config(arch)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, remat=False))
+    steps = 60 if arch == "mamba2_780m" else 40  # SSM learns the rule slower
+    src = SyntheticTokens(cfg, DataConfig(batch_size=8, seq_len=64))
+    losses = []
+    for _ in range(steps):
+        batch = jax.tree.map(jnp.asarray, src.next_batch())
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.4, (losses[0], losses[-1])
+
+
+def test_grad_accumulation_equivalent():
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    s1 = make_train_state(cfg, key)
+    s2 = make_train_state(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+    n1, m1 = make_train_step(cfg, remat=False, accum_steps=1)(s1, batch)
+    n2, m2 = make_train_step(cfg, remat=False, accum_steps=2)(s2, batch)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(n1.params), jax.tree.leaves(n2.params)))
+    assert d < 1e-5
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+
+
+def test_remat_equals_no_remat():
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"), dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab_size)}
+    g1 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat=False)[0])(params)
+    g2 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat=True)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_dicomm_fig7_reproduction():
+    from repro.comm import latency as L
+    s = L.fig7_speedups()
+    assert 1.5 < min(s.values()) < 2.2      # paper: 1.79x at the low end
+    assert 14.0 < max(s.values()) < 18.0    # paper: 16.0x at the high end
+    assert L.fig7_average_speedup() > 5.0   # paper avg: 9.94x
+
+
+def test_nic_affinity_table3():
+    from repro.comm import latency as L
+    aff = L.affinity_throughput() / 1e9
+    non = L.non_affinity_throughput() / 1e9
+    assert 9.0 < aff < 10.5      # paper: 9.56 / 9.91 GB/s
+    assert 5.0 < non < 6.0       # paper: 5.51 / 5.23 GB/s
+    assert (aff - non) / non > 0.7  # paper: +73.5% / +89.5%
