@@ -1,8 +1,18 @@
 """Paper Table 9 (+ Fig 12) — ablations on the Exp-C-1 configuration:
 relative iteration time of DDR vs TCP transport, HeteroPP vs uniform layer
-split, SR&AG resharding on/off, fine-grained overlap on/off — replayed
-through the tick-level 1F1B schedule simulator."""
+split, SR&AG resharding on/off, fine-grained overlap on/off, and pipeline
+SCHEDULE (GPipe / 1F1B / interleaved / ZB-H1 backward-split, the §5
+wgrad-overlap ablation) — replayed through the generic event-driven
+schedule simulator.
+
+    PYTHONPATH=src python -m benchmarks.bench_ablation [--schedule 1f1b]
+
+``--schedule`` sets the reference schedule for the transport/resharding/
+overlap rows; the schedule ablation section always sweeps all of them.
+"""
+import argparse
 import dataclasses
+import sys
 
 from .common import emit
 
@@ -12,33 +22,52 @@ PAPER = {
 }
 
 
-def main():
+def main(argv=None):
     from repro.configs import get_config
     from repro.core import chips, heteroauto, schedule as SCH
     from repro.core.cost_model import ParallelPlan, StagePlan
+    from repro.core.schedules import available_schedules, get_schedule
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=available_schedules(),
+                    help="reference schedule for the Table 9 rows")
+    args = ap.parse_args(argv if argv is not None else [])
 
     cfg = get_config("h2_100b")
     groups = chips.cluster(("A", 384), ("B", 1024))   # Exp-C-1
-    r = heteroauto.search(groups, cfg, 4 * 2 ** 20, 4096, two_stage=True)
+    r = heteroauto.search(groups, cfg, 4 * 2 ** 20, 4096, two_stage=True,
+                          schedule=args.schedule)
     plan = r.plan
     assert plan is not None
 
     def run(transport="device_rdma", resharding="sr_ag", overlap=True,
-            the_plan=None):
-        p = the_plan or plan
-        tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(
-            p, cfg, 4096, transport=transport, resharding=resharding)
-        return SCH.simulate_1f1b(tf, tb, b, tp2p, overlap=overlap,
-                                 t_update=tu).makespan
+            the_plan=None, schedule=None):
+        return SCH.simulate_plan(the_plan or plan, cfg, 4096,
+                                 schedule=schedule or args.schedule,
+                                 transport=transport, resharding=resharding,
+                                 overlap=overlap).makespan
 
     full = run()
-    emit("table9.full", "100.0%", f"makespan={full:.2f}s (reference)")
+    emit("table9.full", "100.0%",
+         f"makespan={full:.2f}s (reference, schedule={args.schedule})")
     emit("table9.tcp", f"{run(transport='cpu_tcp') / full:.1%}",
          f"paper: {PAPER['tcp']}%")
     emit("table9.no_srag", f"{run(resharding='naive') / full:.1%}",
          f"paper: {PAPER['no_srag']}%")
     emit("table9.no_overlap", f"{run(overlap=False) / full:.1%}",
          f"paper: {PAPER['no_overlap']}%")
+
+    # schedule ablation (§5 backward-split / wgrad-overlap): same plan,
+    # every schedule that supports its (S, b)
+    S, b = plan.total_pp, plan.microbatches
+    for name in available_schedules():
+        if not get_schedule(name).supports(S, b):
+            emit(f"table9.schedule.{name}", "n/a",
+                 f"unsupported for S={S} b={b}")
+            continue
+        emit(f"table9.schedule.{name}", f"{run(schedule=name) / full:.1%}",
+             f"relative makespan vs {args.schedule} reference")
 
     # uniform 1F1B: what a homogeneous-style framework would do on the same
     # chips — ONE tp everywhere, equal layers per stage, uniform recompute
@@ -62,14 +91,12 @@ def main():
     g2 = [chips.ChipGroup(chips.CHIPS["A"], 8), chips.ChipGroup(chips.CHIPS["C"], 8)]
     st = [StagePlan(g2[0], 4, 1, 4, False), StagePlan(g2[1], 4, 1, 4, False)]
     p2 = ParallelPlan(st, 2, 8)
-    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(p2, small, 4096)
-    ddr = SCH.simulate_1f1b(tf, tb, b, tp2p, t_update=tu).makespan
-    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(
-        p2, small, 4096, transport="cpu_tcp")
-    tcp = SCH.simulate_1f1b(tf, tb, b, tp2p, t_update=tu).makespan
+    ddr = SCH.simulate_plan(p2, small, 4096, schedule=args.schedule).makespan
+    tcp = SCH.simulate_plan(p2, small, 4096, schedule=args.schedule,
+                            transport="cpu_tcp").makespan
     emit("fig12.small_scale_ddr_speedup", f"{tcp / ddr:.3f}x",
          "DDR vs CPU-mediated TCP, 8-layer model, TP4 PP2 DP2")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

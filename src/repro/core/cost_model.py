@@ -4,8 +4,14 @@
 
 with T_i^comp = ceil(l_i / s_pp,i) · (t^fwd + t^bwd + r_i·t^recomp) and α the
 pipeline-schedule bubble coefficient (1 for the paper's 1F1B, 0 for ZB-V).
-Memory feasibility follows Observation #4: stage k of the global pipeline
-holds min(b, s_pp − k) in-flight microbatch activation sets under 1F1B.
+
+Both α and the memory-feasibility rule are now derived from the plan's
+:class:`~repro.core.schedules.Schedule` (DESIGN.md §4): α comes from the
+schedule's closed form (validated against the op-list derivation), and
+stage k's in-flight microbatch count comes from the schedule's memory
+profile — Observation #4's min(b, s_pp − k) is exactly the 1F1B/ZB-H1
+profile; GPipe stashes b, interleaved more.  Passing an explicit
+``alpha=`` overrides the schedule (legacy sweep path).
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ from typing import List, Optional, Sequence
 from .chips import ChipGroup, ChipSpec
 from .profiler import (analytic_layer_profile, layer_param_count,
                        offload_time, update_time, LayerProfile)
+from .schedules import ScheduleLike, get_schedule
 from ..models.config import ModelConfig
 
 MEM_SAFETY = 0.92
@@ -41,6 +48,7 @@ class ParallelPlan:
     stages: List[StagePlan]  # ordered: largest-memory chip type first
     dp: int
     microbatches: int        # b = B / s_dp (microbatch = 1 sequence)
+    schedule: str = "1f1b"   # pipeline schedule (repro.core.schedules name)
 
     @property
     def total_pp(self) -> int:
@@ -51,7 +59,8 @@ class ParallelPlan:
         return sum(s.pp * s.tp * self.dp for s in self.stages)
 
     def describe(self) -> str:
-        parts = [f"dp={self.dp} b={self.microbatches} pp={self.total_pp}"]
+        parts = [f"dp={self.dp} b={self.microbatches} pp={self.total_pp} "
+                 f"sched={self.schedule}"]
         for s in self.stages:
             parts.append(
                 f"{s.group.name}[pp={s.pp} tp={s.tp} l={s.layers} "
@@ -70,6 +79,8 @@ class PlanCost:
     t_update: List[float]
     bubble_frac: float
     offload: List[bool]
+    alpha: float = 1.0
+    schedule: str = "1f1b"
 
 
 def stage_profiles(plan: ParallelPlan, cfg: ModelConfig, seq_len: int
@@ -79,10 +90,18 @@ def stage_profiles(plan: ParallelPlan, cfg: ModelConfig, seq_len: int
 
 
 def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
-             gbs_tokens: float, *, alpha: float = 1.0,
+             gbs_tokens: float, *, alpha: Optional[float] = None,
+             schedule: Optional[ScheduleLike] = None,
              allow_offload: bool = False,
              profiles: Optional[Sequence[LayerProfile]] = None) -> PlanCost:
     b = plan.microbatches
+    sched = get_schedule(schedule if schedule is not None else plan.schedule)
+    total_pp = plan.total_pp
+    if not sched.supports(total_pp, b):
+        raise ValueError(f"schedule {sched.name!r} does not support "
+                         f"S={total_pp}, b={b} (e.g. interleaved needs "
+                         f"b % S == 0)")
+    a = alpha if alpha is not None else sched.alpha(total_pp, b)
     profs = list(profiles) if profiles is not None else \
         stage_profiles(plan, cfg, seq_len)
 
@@ -99,7 +118,7 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
         w_bytes = lps * prof.layer_param_bytes
         grad_bytes = w_bytes                       # bf16 grads
         opt_bytes = 6 * w_bytes / plan.dp          # fp32 master+m+v, ZeRO-1
-        inflight = min(b, plan.total_pp - stage_offset)
+        inflight = sched.inflight(total_pp, b, stage_offset)
         act_per_mb = lps * (prof.act_boundary_bytes if s.recompute
                             else prof.act_bytes)
         mem = w_bytes + grad_bytes + opt_bytes + inflight * act_per_mb
@@ -125,12 +144,12 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     sum_comp = sum(tc * s.pp for tc, s in zip(t_comp, plan.stages))
     iter_time = 0.0
     for i, s in enumerate(plan.stages):
-        t = b * t_comp[i] + t_upd[i] + alpha * (sum_comp - t_comp[i])
+        t = b * t_comp[i] + t_upd[i] + a * (sum_comp - t_comp[i])
         iter_time = max(iter_time, t)
-    bubble = alpha * (sum_comp - min(t_comp)) / max(iter_time, 1e-9)
+    bubble = a * (sum_comp - min(t_comp)) / max(iter_time, 1e-9)
     tgs = gbs_tokens / (iter_time * plan.total_chips) if iter_time > 0 else 0.0
     return PlanCost(iter_time, tgs, feasible, mems, caps, t_comp, t_upd,
-                    bubble, off)
+                    bubble, off, a, sched.name)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,12 @@ granularity; stage 2 re-splits each island into pseudo-heterogeneous
 subgroups (default 128 chips) under the fixed s_dp with the paper's
 monotone-TP pruning (within one chip type, an earlier subgroup's s_tp must
 be ≥ a later one's).
+
+The pipeline SCHEDULE is a search dimension (DESIGN.md §5): every layer
+assignment is scored under the candidate schedules, pruned by the cost
+model's α monotonicity — compute terms are schedule-independent, so among
+memory-feasible schedules the lowest-α one always wins and the rest need
+no evaluation.
 """
 from __future__ import annotations
 
@@ -26,7 +32,12 @@ from typing import List, Optional, Sequence, Tuple
 from .chips import ChipGroup
 from .cost_model import (ParallelPlan, PlanCost, StagePlan, assign_layers,
                          evaluate)
+from .schedules import ScheduleLike, get_schedule
 from ..models.config import ModelConfig
+
+# default schedule candidates: ZB-H1 dominates 1F1B at equal memory, but
+# 1F1B is kept as the fallback for exotic (S, b) shapes
+DEFAULT_SCHEDULES: Tuple[str, ...] = ("zb_h1", "1f1b")
 
 
 @dataclasses.dataclass
@@ -42,14 +53,17 @@ class SearchResult:
         return self.cost.tgs if self.cost else 0.0
 
 
-def _tp_candidates(group: ChipGroup, dp: int) -> List[int]:
-    out = []
-    tp = 1
-    while tp <= group.spec.tp_max:
-        if group.count % (tp * dp) == 0 and group.count // (tp * dp) >= 1:
-            out.append(tp)
-        tp *= 2
+def _pow2s_upto(n: int) -> List[int]:
+    out, v = [], 1
+    while v <= n:
+        out.append(v)
+        v *= 2
     return out
+
+
+def _tp_candidates(group: ChipGroup, dp: int) -> List[int]:
+    return [tp for tp in _pow2s_upto(group.spec.tp_max)
+            if group.count % (tp * dp) == 0 and group.count // (tp * dp) >= 1]
 
 
 def _dp_candidates(groups: Sequence[ChipGroup], batch_seqs: int,
@@ -58,8 +72,11 @@ def _dp_candidates(groups: Sequence[ChipGroup], batch_seqs: int,
     for dp in range(1, min(batch_seqs, max_dp) + 1):
         if batch_seqs % dp:
             continue
-        if all(any(g.count % (tp * dp) == 0 and tp <= g.spec.tp_max
-                   for tp in (1, 2, 4, 8, 16)) for g in groups):
+        # feasibility probe per group over its OWN power-of-two TP range
+        # (a fixed (1..16) list silently dropped dp values for chips with
+        # larger tp_max)
+        if all(any(g.count % (tp * dp) == 0
+                   for tp in _pow2s_upto(g.spec.tp_max)) for g in groups):
             cands.append(dp)
     return cands
 
@@ -70,14 +87,38 @@ def _ordered(groups: Sequence[ChipGroup]) -> List[ChipGroup]:
 
 
 def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
-           seq_len: int, *, alpha: float = 1.0, two_stage: bool = True,
+           seq_len: int, *, alpha: Optional[float] = None,
+           schedule: Optional[ScheduleLike] = None,
+           schedules: Optional[Sequence[ScheduleLike]] = None,
+           two_stage: bool = True,
            subgroup: int = 128, allow_offload: bool = False,
            monotone_tp: bool = True, dp_candidates: Optional[List[int]] = None,
            ) -> SearchResult:
+    """DFS over (dp, tp_i, recompute_i) × schedule.
+
+    ``alpha``    — legacy: override the bubble coefficient directly
+                   (plans annotated 1F1B; schedule search disabled).
+    ``schedule`` — pin one schedule.
+    ``schedules``— candidate set; default DEFAULT_SCHEDULES.  Pruning:
+                   the first memory-feasible candidate in ascending-α
+                   order is optimal for a given layer assignment (compute
+                   terms don't depend on the schedule), so later ones are
+                   skipped; offload is only considered if NO schedule fits
+                   without it.
+    """
     t0 = time.perf_counter()
     batch_seqs = gbs_tokens // seq_len
     groups = _ordered(groups)
     dps = dp_candidates or _dp_candidates(groups, batch_seqs)
+
+    if schedule is not None:
+        scheds = [get_schedule(schedule)]
+    elif alpha is not None:
+        scheds = [get_schedule("1f1b")]
+    else:
+        scheds = sorted((get_schedule(s) for s in
+                         (schedules or DEFAULT_SCHEDULES)),
+                        key=lambda s: s.alpha())
 
     best_plan, best_cost, evaluated = None, None, 0
 
@@ -86,12 +127,30 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
         sharded = assign_layers(stages, cfg, seq_len, cfg.num_layers)
         if sharded is None:
             return
-        plan = ParallelPlan(sharded, dp, batch_seqs // dp)
-        cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
-                        allow_offload=allow_offload)
-        evaluated += 1
-        if not cost.feasible:
+        b = batch_seqs // dp
+        base = ParallelPlan(sharded, dp, b)
+        usable = [s for s in scheds if s.supports(base.total_pp, b)]
+        picked = None
+        for sched in usable:                       # ascending α: first
+            plan = dataclasses.replace(base, schedule=sched.name)
+            cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
+                            allow_offload=False)
+            evaluated += 1
+            if cost.feasible:                      # feasible wins (pruning)
+                picked = (plan, cost)
+                break
+        if picked is None and allow_offload:
+            for sched in usable:
+                plan = dataclasses.replace(base, schedule=sched.name)
+                cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
+                                allow_offload=True)
+                evaluated += 1
+                if cost.feasible and (picked is None
+                                      or cost.iter_time < picked[1].iter_time):
+                    picked = (plan, cost)
+        if picked is None:
             return
+        plan, cost = picked
         if best_cost is None or cost.iter_time < best_cost.iter_time:
             best_plan, best_cost = plan, cost
 
@@ -150,13 +209,17 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
 # ---------------------------------------------------------------------------
 
 def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
-                         seq_len: int, *, alpha: float = 1.0,
+                         seq_len: int, *, alpha: Optional[float] = 1.0,
+                         schedule: ScheduleLike = "1f1b",
                          allow_offload: bool = True,
                          fixed: Optional[dict] = None) -> SearchResult:
     """Best homogeneous 3D-parallel config for one chip type (or evaluate a
-    pinned configuration, e.g. the paper's Table 6 entries)."""
+    pinned configuration, e.g. the paper's Table 6 entries).  The default
+    alpha=1.0 / 1F1B pairing is what the paper's Table 6 frameworks run;
+    pass ``alpha=None`` with a schedule to re-baseline under another."""
     t0 = time.perf_counter()
     batch_seqs = gbs_tokens // seq_len
+    sched = get_schedule(schedule)
     best_plan, best_cost, evaluated = None, None, 0
     if fixed is not None:
         combos = [(fixed["dp"], fixed["tp"], fixed["recompute"])]
@@ -172,8 +235,10 @@ def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
         pp = group.count // (tp * dp)
         if pp < 1 or cfg.num_layers < pp:
             continue
+        if not sched.supports(pp, batch_seqs // dp):
+            continue
         st = StagePlan(group, tp, pp, layers=cfg.num_layers, recompute=rec)
-        plan = ParallelPlan([st], dp, batch_seqs // dp)
+        plan = ParallelPlan([st], dp, batch_seqs // dp, schedule=sched.name)
         cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
                         allow_offload=allow_offload)
         evaluated += 1

@@ -9,11 +9,15 @@ Two execution paths (DESIGN.md §2 explains the SPMD constraint):
 * ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe``/``pod`` axis
   with GSPMD left automatic over ``data``/``model``: every device runs the
   same program; per-stage *data* (padded stacked layer weights) differs.
-  Microbatches stream through a circular scan schedule; stage-to-stage
-  activation transfer is ``jax.lax.ppermute`` (the DiComm device-direct
-  analogue).  Backward is derived by autodiff through the scan + ppermute —
-  a GPipe-memory schedule with per-layer remat; 1F1B/ZB-V bubble behaviour
-  is modeled by the cost model's α and the ``schedule.py`` simulator.
+  Microbatches stream through a circular scan whose tick→microbatch
+  mapping is generated from the plan's ``repro.core.schedules`` Schedule
+  (the per-stage forward op order must be a diagonal stream — true for
+  gpipe/1f1b/zb_h1; multi-chunk interleaved schedules are rejected).
+  Stage-to-stage activation transfer is ``jax.lax.ppermute`` (the DiComm
+  device-direct analogue).  Backward is derived by autodiff through the
+  scan + ppermute — a GPipe-memory schedule with per-layer remat;
+  1F1B/ZB-V bubble behaviour is modeled by the cost model's α and the
+  generic schedule simulator.
 
 Non-uniform layer counts: stages are padded to max layers/stage and masked
 per-stage (idle compute on short stages is the price of SPMD; HeteroAuto's
@@ -44,6 +48,7 @@ class PipelineSpec:
     microbatches: int
     recompute: Tuple[bool, ...] = ()      # per-stage (simulate/cost model)
     pipe_axis: str = "pipe"
+    schedule: str = "1f1b"                # repro.core.schedules name
 
     def __post_init__(self):
         assert len(self.layers_per_stage) == self.num_stages
@@ -72,7 +77,7 @@ def from_plan(plan, microbatches: Optional[int] = None) -> PipelineSpec:
             rec.append(s.recompute)
             left -= take
     return PipelineSpec(len(lps), tuple(lps), microbatches or plan.microbatches,
-                        tuple(rec))
+                        tuple(rec), schedule=plan.schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -130,7 +135,10 @@ def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool):
         y, m = tfm.block_forward(p, cfg, x, kind)
         aux = m.get("moe_aux_loss", 0.0) + m.get("moe_z_loss", 0.0)
         x = jnp.where(valid, y, x)
-        return x, jnp.where(valid, jnp.asarray(aux, jnp.float32), 0.0)
+        # rank-1, not scalar: rank-0 float consts become implicit
+        # shard_map inputs whose cotangents the legacy transpose rejects
+        aux1 = jnp.asarray(aux, jnp.float32).reshape(1)
+        return x, jnp.where(valid, aux1, 0.0)
 
     body = jax.checkpoint(one) if remat else one
     x, auxs = jax.lax.scan(body, x, (blocks, mask_row))
@@ -141,19 +149,54 @@ def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool):
 # SPMD pipeline (shard_map over the pipe axis)
 # ---------------------------------------------------------------------------
 
+def schedule_injection_order(schedule, num_stages: int, microbatches: int
+                             ) -> List[int]:
+    """Tick→microbatch mapping for the SPMD circular scan, generated from
+    a ``repro.core.schedules`` Schedule.
+
+    The scan is tick-synchronous: at tick t stage s consumes what stage
+    s−1 produced at tick t−1, so stage s's i-th forward must be the same
+    microbatch as stage 0's i-th forward — a diagonal stream whose only
+    degree of freedom is the stage-0 injection order.  gpipe/1f1b/zb_h1
+    all satisfy this (identical forward order per stage); multi-chunk
+    interleaved schedules do not fit a single-stage-per-device scan and
+    are rejected (DESIGN.md §6).
+    """
+    from .schedules import get_schedule
+    sched = get_schedule(schedule)
+    if sched.n_chunks != 1:
+        raise NotImplementedError(
+            f"schedule {sched.name!r}: the SPMD runtime maps one stage per "
+            f"pipe-axis member; virtual-stage (chunked) schedules need a "
+            f"chunked parameter layout")
+    forder = [[op.mb for op in row if op.kind == "F"]
+              for row in sched.ops(num_stages, microbatches)]
+    inj = forder[0]
+    assert sorted(inj) == list(range(microbatches)), (sched.name, inj)
+    for s, row in enumerate(forder):
+        if row != inj:
+            raise NotImplementedError(
+                f"schedule {sched.name!r}: stage {s} forward order {row} "
+                f"is not the diagonal stream of stage 0 ({inj})")
+    return inj
+
+
 def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
-                            *, remat: bool = True):
-    """Returns loss_fn(stage_params, mask, batch) -> (loss, metrics), where
+                            *, remat: bool = True,
+                            schedule: Optional[str] = None):
+    """Returns loss_fn(stage_params, mask, tokens) -> scalar loss, where
     inside ``shard_map`` each pipe-axis member holds ONE stage.
 
-    batch["tokens"]: (b, mb_size, S_seq) — b microbatches.
+    tokens: (b, mb_size, S_seq) — b microbatches, streamed in the
+    schedule's injection order (validated against the scan constraint).
     """
     kind = M._block_kind(cfg)
     axis = spec.pipe_axis
     nstages = spec.num_stages
     b = spec.microbatches
     ticks = b + nstages - 1
-    auto = frozenset(a for a in mesh.axis_names if a != axis)
+    inj = schedule_injection_order(schedule or spec.schedule, nstages, b)
+    inj_arr = jnp.asarray(inj, jnp.int32)
 
     def stage_loss(stage_params, mask, tokens):
         # Inside shard_map: leading stage dim is local (size 1) -> squeeze.
@@ -171,7 +214,10 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
         def tick(carry, t):
             x_in, loss_acc, aux_acc, denom = carry
-            mb_idx = jnp.clip(t - sid, 0, b - 1)
+            # schedule-aware tick→microbatch mapping: position in the
+            # stream is t - sid; the injection order array turns it into
+            # the microbatch id (identity for gpipe/1f1b/zb_h1)
+            mb_idx = inj_arr[jnp.clip(t - sid, 0, b - 1)]
             toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
                                                 keepdims=False)
             # stage 0 injects the embedded microbatch; others use received x
@@ -194,11 +240,17 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
             x_next = jax.lax.ppermute(y, axis, perm)
             return (x_next, loss_acc, aux_acc, denom), None
 
+        # accumulators are rank-1 (see _stage_forward): the zero inits are
+        # closed-over constants that shard_map lifts to implicit
+        # pipe-named inputs, and rank-0 ones cannot be transposed
         x_init = jnp.zeros((mb_size, S_seq, d), dtype)
-        carry = (x_init, jnp.float32(0), jnp.float32(0), jnp.float32(0))
+        zero = jnp.zeros((1,), jnp.float32)
+        carry = (x_init, zero, zero, zero)
         (x_last, loss_sum, aux_sum, denom), _ = jax.lax.scan(
             tick, carry, jnp.arange(ticks))
-        # broadcast the last stage's loss to every pipe member
+        # broadcast the last stage's loss to every pipe member; emit one
+        # (identical, shape-(1,)) copy per member — a replicated scalar
+        # out_spec does not transpose under the legacy shard_map API
         loss_sum = jax.lax.psum(loss_sum, axis)
         denom = jax.lax.psum(denom, axis)
         aux_sum = jax.lax.psum(aux_sum, axis) / nstages
@@ -214,19 +266,25 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         P(axis),
         P(),
     )
-    kwargs = {"check_vma": False}
-    if auto:
-        # manual over the pipe axis only; data/model stay GSPMD-automatic
-        kwargs["axis_names"] = {axis}
-    smapped = jax.shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
-                            out_specs=P(), **kwargs)
-    return smapped
+    # manual over the pipe axis only; data/model stay GSPMD-automatic
+    from .jax_compat import shard_map
+    smapped = shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
+                        out_specs=P(axis), manual_axes={axis})
+
+    def loss_fn(stage_params, mask, tokens):
+        # (S,) identical per-member copies -> scalar (mean keeps the
+        # cotangent uniform across members; each carries 1/S of it)
+        return jnp.mean(smapped(stage_params, mask, tokens))
+
+    return loss_fn
 
 
 def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
-                                  mesh: Mesh, opt_cfg=None, *, remat=True):
+                                  mesh: Mesh, opt_cfg=None, *, remat=True,
+                                  schedule: Optional[str] = None):
     opt_cfg = opt_cfg or adamw.AdamWConfig()
-    loss_fn = make_spmd_pipeline_loss(cfg, spec, mesh, remat=remat)
+    loss_fn = make_spmd_pipeline_loss(cfg, spec, mesh, remat=remat,
+                                      schedule=schedule)
 
     def train_step(state, mask, batch):
         params, opt_state, step = state

@@ -105,6 +105,6 @@ def reshard(x: jax.Array, mesh: Mesh, *, strategy: str = "sr_ag",
             shard = xs.shape[-1]
             return jax.lax.dynamic_slice_in_dim(full, k * shard, shard, -1)
 
+    from .jax_compat import shard_map
     spec = P(pipe_axis, None, tp_axis)
-    return jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec,
-                         check_vma=False)(x)
+    return shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec)(x)

@@ -1,139 +1,55 @@
-"""Pipeline schedule simulator (1F1B / GPipe) with per-stage heterogeneous
-times, P2P transfer costs, and optional fine-grained compute/comm overlap.
+"""Pipeline-schedule replay with per-stage heterogeneous times, P2P
+transfer costs, and optional fine-grained compute/comm overlap.
 
-This is the tick-level counterpart of the cost model's α coefficient: it
-replays a searched HeteroPP plan with per-chip profiles and produces the
-iteration makespan, driving the Table 9 ablations (uniform-vs-HeteroPP layer
-split, DDR-vs-TCP transport, SR&AG-vs-naive resharding, overlap on/off).
+The actual schedule semantics live in ``repro.core.schedules``: a
+:class:`~repro.core.schedules.Schedule` generates per-stage F/B/D/W op
+lists, and ONE generic event-driven simulator replays them (this module's
+old ``simulate_1f1b``/``simulate_gpipe`` loops are now thin wrappers over
+it).  This is the tick-level counterpart of the cost model's α
+coefficient: it replays a searched HeteroPP plan with per-chip profiles
+and produces the iteration makespan, driving the Table 9 ablations
+(uniform-vs-HeteroPP layer split, DDR-vs-TCP transport, SR&AG-vs-naive
+resharding, overlap on/off, and now schedule choice).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Optional, Sequence
 
+from .schedules import ScheduleLike, SimResult, get_schedule, simulate
 
-@dataclasses.dataclass
-class SimResult:
-    makespan: float
-    stage_busy: List[float]
-    bubble_frac: float
+__all__ = ["SimResult", "simulate", "simulate_1f1b", "simulate_gpipe",
+           "plan_to_schedule_inputs", "simulate_plan"]
 
 
 def simulate_1f1b(t_fwd: Sequence[float], t_bwd: Sequence[float],
                   microbatches: int, t_p2p: Sequence[float],
-                  *, overlap: bool = True, t_update: Sequence[float] = None
-                  ) -> SimResult:
-    """Event-driven 1F1B.
-
-    t_fwd/t_bwd: per-stage per-microbatch compute times (len S).
-    t_p2p[i]: activation transfer time across boundary i -> i+1 (len S-1);
-    the same cost is charged to gradient transfers on the way back.
-    overlap=False models un-overlapped P2P: the transfer occupies the
-    *sender* stage as well as delaying the receiver (paper §5 fine-grained
-    overlap ablation).
-    """
-    S, b = len(t_fwd), microbatches
-    t_update = list(t_update) if t_update is not None else [0.0] * S
-
-    # per-stage op sequences in 1F1B order
-    ops: List[List[Tuple[str, int]]] = []
-    for s in range(S):
-        warmup = min(S - s, b)
-        seq = [("F", m) for m in range(warmup)]
-        nf, nb = warmup, 0
-        while nb < b:
-            seq.append(("B", nb)); nb += 1
-            if nf < b:
-                seq.append(("F", nf)); nf += 1
-        ops.append(seq)
-
-    fwd_done = [[None] * b for _ in range(S)]
-    bwd_done = [[None] * b for _ in range(S)]
-    free = [0.0] * S
-    busy = [0.0] * S
-    progress = True
-    idx = [0] * S
-    while progress:
-        progress = False
-        for s in range(S):
-            while idx[s] < len(ops[s]):
-                kind, m = ops[s][idx[s]]
-                if kind == "F":
-                    dep = 0.0 if s == 0 else fwd_done[s - 1][m]
-                    if dep is None:
-                        break
-                    ready = dep + (t_p2p[s - 1] if s > 0 else 0.0)
-                    start = max(free[s], ready)
-                    dur = t_fwd[s] + (0.0 if overlap or s == S - 1
-                                      else t_p2p[s])
-                    fwd_done[s][m] = start + dur
-                else:
-                    dep_self = fwd_done[s][m]
-                    dep_next = 0.0 if s == S - 1 else bwd_done[s + 1][m]
-                    if dep_self is None or dep_next is None:
-                        break
-                    ready = max(dep_self,
-                                dep_next + (t_p2p[s] if s < S - 1 else 0.0))
-                    start = max(free[s], ready)
-                    dur = t_bwd[s] + (0.0 if overlap or s == 0
-                                      else t_p2p[s - 1])
-                    bwd_done[s][m] = start + dur
-                free[s] = start + dur
-                busy[s] += dur
-                idx[s] += 1
-                progress = True
-
-    assert all(i == len(o) for i, o in zip(idx, ops)), "deadlocked schedule"
-    end = max(free[s] + t_update[s] for s in range(S))
-    bubble = 1.0 - sum(busy) / (S * end) if end else 0.0
-    return SimResult(end, busy, bubble)
+                  *, overlap: bool = True,
+                  t_update: Optional[Sequence[float]] = None) -> SimResult:
+    """Event-driven 1F1B (compat wrapper over the generic simulator)."""
+    return simulate("1f1b", t_fwd, t_bwd, microbatches, t_p2p,
+                    overlap=overlap, t_update=t_update)
 
 
 def simulate_gpipe(t_fwd, t_bwd, microbatches, t_p2p, *, overlap=True,
                    t_update=None) -> SimResult:
-    """All forwards, then all backwards (the SPMD runtime's schedule)."""
-    S, b = len(t_fwd), microbatches
-    t_update = list(t_update) if t_update is not None else [0.0] * S
-    fwd_done = [[0.0] * b for _ in range(S)]
-    free = [0.0] * S
-    busy = [0.0] * S
-    for m in range(b):
-        for s in range(S):
-            dep = 0.0 if s == 0 else fwd_done[s - 1][m] + t_p2p[s - 1]
-            start = max(free[s], dep)
-            dur = t_fwd[s] + (0.0 if overlap or s == S - 1 else t_p2p[s])
-            fwd_done[s][m] = start + dur
-            free[s] = fwd_done[s][m]
-            busy[s] += dur
-    bwd_done = [[0.0] * b for _ in range(S)]
-    for m in range(b):
-        for s in reversed(range(S)):
-            dep = fwd_done[s][m] if s == S - 1 else \
-                bwd_done[s + 1][m] + t_p2p[s]
-            dep = max(dep, fwd_done[s][m])
-            start = max(free[s], dep)
-            dur = t_bwd[s] + (0.0 if overlap or s == 0 else
-                              (t_p2p[s - 1] if s > 0 else 0.0))
-            bwd_done[s][m] = start + dur
-            free[s] = bwd_done[s][m]
-            busy[s] += dur
-    end = max(free[s] + t_update[s] for s in range(S))
-    bubble = 1.0 - sum(busy) / (S * end) if end else 0.0
-    return SimResult(end, busy, bubble)
+    """All forwards, then all backwards (compat wrapper)."""
+    return simulate("gpipe", t_fwd, t_bwd, microbatches, t_p2p,
+                    overlap=overlap, t_update=t_update)
 
 
 # ---------------------------------------------------------------------------
 # plan replay: HeteroAuto plan -> schedule inputs
 # ---------------------------------------------------------------------------
 
-def plan_to_schedule_inputs(plan, cfg, seq_len: int, *, transport="device_rdma",
-                            resharding="sr_ag", split_backward=True):
+def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
+                            transport="device_rdma", resharding="sr_ag"):
     """Expand a ParallelPlan into per-STAGE fwd/bwd/p2p times.
 
-    split_backward=True models §5's decomposition (recompute+dgrad+wgrad
-    interleaving) by allowing the wgrad fraction of backward off the
-    critical path: effective t_bwd is reduced by the overlappable wgrad
-    share when the stage would otherwise idle on P2P.
+    ``t_bwd`` is the FULL backward time per stage; the dgrad/wgrad
+    decomposition (§5's recompute+dgrad+wgrad interleaving) is a property
+    of the backward-split schedules (``zb_h1``) and is applied inside the
+    simulator via ``wgrad_frac`` — the former ``split_backward`` flag here
+    was a no-op and has been removed.
     """
     from .cost_model import stage_profiles
     from .resharding import boundary_time
@@ -165,7 +81,16 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *, transport="device_rdma",
                             intra_bw=specs[i + 1].intra_node_bw,
                             strategy="sr_ag")
         t_p2p.append(base + max(extra, 0.0))
-    if split_backward:
-        # wgrad (≈1/2 of backward) can slide off the critical path
-        t_bwd = [b_ * 0.5 + b_ * 0.5 for b_ in t_bwd]  # kept; overlap flag
     return t_fwd, t_bwd, plan.microbatches, t_p2p, t_upd
+
+
+def simulate_plan(plan, cfg, seq_len: int, *,
+                  schedule: Optional[ScheduleLike] = None,
+                  transport="device_rdma", resharding="sr_ag",
+                  overlap: bool = True, wgrad_frac: float = 0.5) -> SimResult:
+    """Replay a HeteroAuto plan through its (or the given) schedule."""
+    sched = get_schedule(schedule if schedule is not None else plan.schedule)
+    tf, tb, b, tp2p, tu = plan_to_schedule_inputs(
+        plan, cfg, seq_len, transport=transport, resharding=resharding)
+    return simulate(sched, tf, tb, b, tp2p, overlap=overlap, t_update=tu,
+                    wgrad_frac=wgrad_frac)

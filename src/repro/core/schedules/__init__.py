@@ -1,0 +1,18 @@
+"""Pluggable pipeline-schedule subsystem (DESIGN.md §3).
+
+One :class:`Schedule` abstraction — per-stage F/B/D/W op lists — drives:
+the generic event-driven :func:`simulate`, the cost model's α coefficient
+and memory-feasibility profile (``repro.core.cost_model``), HeteroAuto's
+schedule search dimension, and the SPMD runtime's tick→microbatch mapping
+(``repro.core.heteropp``).
+"""
+from .base import (Op, Schedule, ScheduleLike, available_schedules,
+                   get_schedule, register)
+from .library import GPipe, Interleaved1F1B, OneFOneB, ZBH1
+from .simulator import SimResult, simulate
+
+__all__ = [
+    "Op", "Schedule", "ScheduleLike", "available_schedules", "get_schedule",
+    "register", "GPipe", "Interleaved1F1B", "OneFOneB", "ZBH1",
+    "SimResult", "simulate",
+]

@@ -1,0 +1,155 @@
+"""Pipeline-schedule abstraction (DESIGN.md §3).
+
+A :class:`Schedule` is defined by ONE thing: the per-stage list of typed
+ops it executes — forward (``F``), combined backward (``B``), or the
+backward split into dgrad (``D``) and wgrad (``W``).  Everything else the
+system needs is *derived* from that op structure:
+
+* the event-driven simulator (``simulator.py``) replays the op lists with
+  per-stage heterogeneous times → makespan / bubble (Table 9 ablations);
+* the cost model's bubble coefficient α (paper §4.3.2) — each schedule
+  ships a closed form, and :meth:`Schedule.derived_alpha` re-derives it
+  from the op lists with canonical unit times so the closed forms are
+  regression-tested against the abstraction rather than trusted;
+* the in-flight-microbatch memory profile (paper Observation #4,
+  generalized beyond 1F1B) consumed by the memory-feasibility check —
+  :meth:`Schedule.derived_inflight` walks each stage's op list counting
+  stashed forward activations (freed at ``B``, or at ``W`` for
+  backward-split schedules, since wgrad still needs the layer input).
+
+Concrete schedules live in ``library.py`` and self-register; look them up
+with :func:`get_schedule`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+ScheduleLike = Union[str, "Schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One unit of per-stage work.
+
+    kind:  "F" forward | "B" full backward | "D" dgrad | "W" wgrad
+    mb:    microbatch index
+    chunk: virtual-stage chunk (interleaved schedules; 0 otherwise)
+    """
+    kind: str
+    mb: int
+    chunk: int = 0
+
+
+class Schedule:
+    """Base class: subclasses implement :meth:`ops` plus a closed-form
+    :meth:`alpha` / :meth:`inflight`; the ``derived_*`` methods compute the
+    same quantities from the op lists for cross-validation."""
+
+    name: str = "?"
+    n_chunks: int = 1              # virtual stages per physical stage
+    splits_backward: bool = False  # emits D/W instead of B
+
+    # canonical unit times (f : dgrad : wgrad) used for the α derivation;
+    # full backward = dgrad + wgrad = 2f, the transformer rule of thumb
+    UNIT_F, UNIT_D, UNIT_W = 1.0, 1.0, 1.0
+
+    def __init__(self):
+        self._inflight_cache: Dict[tuple, List[float]] = {}
+
+    # ------------------------------------------------------------------ ops
+    def ops(self, num_stages: int, microbatches: int) -> List[List[Op]]:
+        raise NotImplementedError
+
+    def supports(self, num_stages: int, microbatches: int) -> bool:
+        """Whether this schedule is well-formed for (S, b)."""
+        return num_stages >= 1 and microbatches >= 1
+
+    # ---------------------------------------------------------------- alpha
+    def alpha(self, num_stages: Optional[int] = None,
+              microbatches: Optional[int] = None) -> float:
+        """Closed-form bubble coefficient for the §4.3.2 cost model:
+        iter_time = max_i(b·T_i + T_i^upd + α·Σ_{j≠i} T_j)."""
+        raise NotImplementedError
+
+    def derived_alpha(self, num_stages: int, microbatches: int) -> float:
+        """Re-derive α from the op lists: replay with canonical unit times
+        and zero transfer cost, then invert the uniform-pipeline closed
+        form T = b·T_c + α·(S−1)·T_c."""
+        from .simulator import simulate
+        S, b = num_stages, microbatches
+        if S <= 1:
+            return 0.0
+        f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+        tc = f + d + w
+        r = simulate(self, [f] * S, [d + w] * S, b, [0.0] * (S - 1),
+                     wgrad_frac=w / (d + w))
+        return max(0.0, (r.makespan - b * tc) / ((S - 1) * tc))
+
+    # --------------------------------------------------------------- memory
+    def inflight(self, num_stages: int, microbatches: int, stage: int
+                 ) -> float:
+        """Peak number of in-flight microbatch activation sets held by
+        global stage ``stage`` (in full-stage units; may be fractional for
+        chunked schedules).  Default: derived from the op lists, cached
+        per (S, b)."""
+        return self.inflight_profile(num_stages, microbatches)[stage]
+
+    def inflight_profile(self, num_stages: int, microbatches: int
+                         ) -> List[float]:
+        key = (num_stages, microbatches)
+        prof = self._inflight_cache.get(key)
+        if prof is None:
+            prof = self.derived_inflight(num_stages, microbatches)
+            if len(self._inflight_cache) > 256:
+                self._inflight_cache.clear()
+            self._inflight_cache[key] = prof
+        return prof
+
+    def derived_inflight(self, num_stages: int, microbatches: int
+                         ) -> List[float]:
+        """Walk each stage's op list: +1 activation set on F, freed at B
+        (or at W for backward-split schedules).  Chunk ops stash 1/v of a
+        stage's activation set."""
+        free_at = "W" if self.splits_backward else "B"
+        unit = 1.0 / self.n_chunks
+        out = []
+        for seq in self.ops(num_stages, microbatches):
+            held = peak = 0.0
+            for op in seq:
+                if op.kind == "F":
+                    held += unit
+                    peak = max(peak, held)
+                elif op.kind == free_at:
+                    held -= unit
+            out.append(peak)
+        return out
+
+    def __repr__(self):
+        return f"<Schedule {self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Schedule] = {}
+
+
+def register(sched: Schedule) -> Schedule:
+    _REGISTRY[sched.name] = sched
+    return sched
+
+
+def get_schedule(sched: ScheduleLike) -> Schedule:
+    if isinstance(sched, Schedule):
+        return sched
+    try:
+        return _REGISTRY[sched]
+    except KeyError:
+        raise KeyError(f"unknown schedule {sched!r}; "
+                       f"available: {available_schedules()}") from None
+
+
+def available_schedules() -> List[str]:
+    return sorted(_REGISTRY)

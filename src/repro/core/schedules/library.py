@@ -1,0 +1,161 @@
+"""Concrete pipeline schedules (DESIGN.md §3–§4).
+
+Closed forms shipped here are regression-tested against the op-list
+derivation (``Schedule.derived_alpha`` / ``derived_inflight``) in
+``tests/test_schedules.py``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .base import Op, Schedule, register
+
+
+class GPipe(Schedule):
+    """All forwards, then all backwards.  α = 1 (same time-bubble as
+    1F1B on uniform stages) but every microbatch's activations stay
+    stashed until its backward: inflight = b at every stage.  This is the
+    schedule the SPMD runtime's autodiff-through-scan realizes."""
+
+    name = "gpipe"
+
+    def ops(self, S: int, b: int) -> List[List[Op]]:
+        row = [Op("F", m) for m in range(b)] + [Op("B", m) for m in range(b)]
+        return [list(row) for _ in range(S)]
+
+    def alpha(self, num_stages=None, microbatches=None) -> float:
+        return 1.0
+
+    def inflight(self, S: int, b: int, stage: int) -> float:
+        return float(b)
+
+
+class OneFOneB(Schedule):
+    """Classic 1F1B: stage s warms up with min(S−s, b) forwards then
+    alternates B/F.  α = 1; inflight(k) = min(b, S−k) — the paper's
+    Observation #4 memory rule."""
+
+    name = "1f1b"
+
+    def ops(self, S: int, b: int) -> List[List[Op]]:
+        out = []
+        for s in range(S):
+            warmup = min(S - s, b)
+            seq = [Op("F", m) for m in range(warmup)]
+            nf, nb = warmup, 0
+            while nb < b:
+                seq.append(Op("B", nb))
+                nb += 1
+                if nf < b:
+                    seq.append(Op("F", nf))
+                    nf += 1
+            out.append(seq)
+        return out
+
+    def alpha(self, num_stages=None, microbatches=None) -> float:
+        return 1.0
+
+    def inflight(self, S: int, b: int, stage: int) -> float:
+        return float(min(b, S - stage))
+
+
+class ZBH1(Schedule):
+    """ZB-H1-style backward split (Qi et al., zero-bubble pipelining).
+
+    Backward is split into dgrad (D, unlocks the upstream stage) and
+    wgrad (W, local weight gradient).  Stage s runs the 1F1B pattern with
+    B → (D, W): downstream stages only wait on D, so the cooldown wave
+    propagates at dgrad speed and each stage's W fills what was bubble in
+    1F1B — wgrad genuinely slides off the critical path.  W(m) is issued
+    right after D(m), so the stashed-activation profile is exactly
+    1F1B's: inflight(k) = min(b, S−k).
+
+    α = (f + d) / (f + d + w): only fwd+dgrad remain on the fill/drain
+    path.  With the canonical f:d:w = 1:1:1 units (full bwd = 2·fwd)
+    that is 2/3 — between the paper's 1F1B (α=1) and ideal ZB-V (α=0).
+    """
+
+    name = "zb_h1"
+    splits_backward = True
+
+    def ops(self, S: int, b: int) -> List[List[Op]]:
+        out = []
+        for s in range(S):
+            warmup = min(S - s, b)
+            seq = [Op("F", m) for m in range(warmup)]
+            nf = warmup
+            nd = 0
+            while nd < b:
+                seq.append(Op("D", nd))
+                seq.append(Op("W", nd))
+                nd += 1
+                if nf < b:
+                    seq.append(Op("F", nf))
+                    nf += 1
+            out.append(seq)
+        return out
+
+    def alpha(self, num_stages=None, microbatches=None) -> float:
+        f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+        return (f + d) / (f + d + w)
+
+    def inflight(self, S: int, b: int, stage: int) -> float:
+        return float(min(b, S - stage))
+
+
+class Interleaved1F1B(Schedule):
+    """Interleaved (virtual-stage) 1F1B, Megatron-style: each physical
+    stage holds ``n_chunks`` model chunks of 1/v of its layers; global
+    pipeline depth becomes S·v while fill/drain cost per chunk shrinks by
+    v, so α = 1/v.  Microbatches advance in groups of S per chunk;
+    requires b % S == 0 (the Megatron constraint).  Memory rises: the
+    extra warmup chunks stay stashed (profile derived from the op lists).
+    """
+
+    def __init__(self, n_chunks: int = 2):
+        super().__init__()
+        assert n_chunks >= 2
+        self.n_chunks = n_chunks
+        self.name = "interleaved" if n_chunks == 2 else \
+            f"interleaved{n_chunks}"
+
+    def supports(self, S: int, b: int) -> bool:
+        return S >= 2 and b >= S and b % S == 0
+
+    def _orders(self, S: int, b: int):
+        v = self.n_chunks
+        fwd = [(c, g * S + k) for g in range(b // S)
+               for c in range(v) for k in range(S)]
+        bwd = [(c, g * S + k) for g in range(b // S)
+               for c in reversed(range(v)) for k in range(S)]
+        return fwd, bwd
+
+    def ops(self, S: int, b: int) -> List[List[Op]]:
+        assert self.supports(S, b), (S, b, self.name)
+        v = self.n_chunks
+        forder, border = self._orders(S, b)
+        total = v * b
+        out = []
+        for s in range(S):
+            warmup = min(2 * (S - s - 1) + (v - 1) * S + 1, total)
+            seq = [Op("F", m, c) for c, m in forder[:warmup]]
+            nf, nb = warmup, 0
+            while nb < total:
+                c, m = border[nb]
+                seq.append(Op("B", m, c))
+                nb += 1
+                if nf < total:
+                    c, m = forder[nf]
+                    seq.append(Op("F", m, c))
+                    nf += 1
+            out.append(seq)
+        return out
+
+    def alpha(self, num_stages=None, microbatches=None) -> float:
+        return 1.0 / self.n_chunks
+
+
+register(GPipe())
+register(OneFOneB())
+register(ZBH1())
+register(Interleaved1F1B(2))

@@ -1,0 +1,110 @@
+"""ONE generic event-driven pipeline simulator (DESIGN.md §3).
+
+Replaces the per-schedule simulation loops: any :class:`Schedule`'s op
+lists are replayed against per-stage heterogeneous compute times and P2P
+transfer costs.  Per-stage ops execute strictly in list order (a stage is
+one device); an op waits for its cross-stage dependencies:
+
+  F(m, g)   ← F(m, g−1) done (+ transfer), g the global chunk-stage index
+  B/D(m, g) ← own F(m, g) and D-or-B(m, g+1) done (+ transfer)
+  W(m, g)   ← own D(m, g) done (in-order execution already guarantees it)
+
+``overlap=False`` models un-overlapped P2P (paper §5): the transfer also
+occupies the *sender* stage.  For chunked (interleaved) schedules each op
+carries 1/v of the stage's layer time, and the wrap-around hop from stage
+S−1 back to stage 0 is charged the worst boundary cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from .base import ScheduleLike, get_schedule
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    stage_busy: List[float]
+    bubble_frac: float
+
+
+def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
+             t_bwd: Sequence[float], microbatches: int,
+             t_p2p: Sequence[float], *, overlap: bool = True,
+             t_update: Optional[Sequence[float]] = None,
+             wgrad_frac: float = 0.5) -> SimResult:
+    """t_fwd/t_bwd: per-stage per-microbatch compute times (len S; t_bwd is
+    the FULL backward — for backward-split schedules it is divided into
+    dgrad = (1−wgrad_frac)·t_bwd and wgrad = wgrad_frac·t_bwd).
+    t_p2p[i]: activation transfer across boundary i → i+1 (len S−1); the
+    same cost is charged to gradient transfers on the way back."""
+    sched = get_schedule(schedule)
+    S, b, v = len(t_fwd), microbatches, sched.n_chunks
+    assert sched.supports(S, b), (sched.name, S, b)
+    G = S * v
+    ops = sched.ops(S, b)
+    t_update = list(t_update) if t_update is not None else [0.0] * S
+    t_p2p = list(t_p2p)
+
+    fdur = [t / v for t in t_fwd]
+    bdur = [t / v for t in t_bwd]
+    ddur = [t * (1.0 - wgrad_frac) / v for t in t_bwd]
+    wdur = [t * wgrad_frac / v for t in t_bwd]
+
+    def xfer(a: int, c: int) -> float:
+        if a == c:
+            return 0.0
+        if abs(a - c) == 1:
+            return t_p2p[min(a, c)]
+        return max(t_p2p) if t_p2p else 0.0   # interleaved wrap-around hop
+
+    fwd_done = [[None] * b for _ in range(G)]
+    dgrad_done = [[None] * b for _ in range(G)]   # B sets this too
+    free = [0.0] * S
+    busy = [0.0] * S
+    idx = [0] * S
+    progress = True
+    while progress:
+        progress = False
+        for s in range(S):
+            while idx[s] < len(ops[s]):
+                op = ops[s][idx[s]]
+                g = op.chunk * S + s
+                if op.kind == "F":
+                    dep = 0.0 if g == 0 else fwd_done[g - 1][op.mb]
+                    if dep is None:
+                        break
+                    ready = dep + (xfer((g - 1) % S, s) if g > 0 else 0.0)
+                    dur = fdur[s] + (0.0 if overlap or g == G - 1
+                                     else xfer(s, (g + 1) % S))
+                    start = max(free[s], ready)
+                    fwd_done[g][op.mb] = start + dur
+                elif op.kind in ("B", "D"):
+                    dep_self = fwd_done[g][op.mb]
+                    dep_next = 0.0 if g == G - 1 else dgrad_done[g + 1][op.mb]
+                    if dep_self is None or dep_next is None:
+                        break
+                    ready = max(dep_self,
+                                dep_next + (xfer((g + 1) % S, s)
+                                            if g < G - 1 else 0.0))
+                    dur = (bdur[s] if op.kind == "B" else ddur[s]) + \
+                        (0.0 if overlap or g == 0 else xfer(s, (g - 1) % S))
+                    start = max(free[s], ready)
+                    dgrad_done[g][op.mb] = start + dur
+                else:                                   # W
+                    dep = dgrad_done[g][op.mb]
+                    if dep is None:
+                        break
+                    start = max(free[s], dep)
+                    dur = wdur[s]
+                free[s] = start + dur
+                busy[s] += dur
+                idx[s] += 1
+                progress = True
+
+    assert all(i == len(o) for i, o in zip(idx, ops)), \
+        f"deadlocked schedule {sched.name} (S={S}, b={b})"
+    end = max(free[s] + t_update[s] for s in range(S))
+    bubble = 1.0 - sum(busy) / (S * end) if end else 0.0
+    return SimResult(end, busy, bubble)

@@ -2,10 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1p5_0p5b \
         --steps 100 --batch 8 --seq 256 [--model-parallel 1] [--accum 1] \
+        [--pipeline-parallel 4 --schedule 1f1b --microbatches 4] \
         [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
 
 Uses whatever devices exist (CPU/TPU); on a real TPU fleet the same flags
 drive the production mesh.  ``--smoke`` selects the reduced config family.
+``--pipeline-parallel N`` switches to the shard_map HeteroPP pipeline over
+N devices; ``--schedule`` picks the pipeline schedule (see
+``repro.core.schedules``) and is validated against the SPMD scan
+constraint.
 """
 from __future__ import annotations
 
@@ -14,15 +19,68 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..checkpointing.io import load_checkpoint, save_checkpoint
 from ..configs import canonical, get_config, get_smoke_config, list_configs
+from ..core.schedules import available_schedules
 from ..data.pipeline import DataConfig, make_loader
 from ..optim.adamw import AdamWConfig
 from ..sharding import ctx, rules
 from ..training.train_step import (abstract_train_state, make_train_state,
                                    make_train_step)
 from .mesh import make_local_mesh
+
+
+def run_pipeline(args, cfg):
+    """shard_map pipeline training: one stage per pipe-axis member."""
+    from jax.sharding import Mesh
+    from ..core import heteropp as HP
+    from ..optim import adamw
+
+    pp = args.pipeline_parallel
+    devices = jax.devices()
+    if len(devices) < pp:
+        raise SystemExit(f"--pipeline-parallel {pp} needs ≥{pp} devices "
+                         f"(have {len(devices)})")
+    mesh = Mesh(np.array(devices[:pp]), ("pipe",))
+
+    L = cfg.num_layers
+    base, rem = divmod(L, pp)
+    lps = tuple(base + (1 if i < rem else 0) for i in range(pp))
+    mb = args.microbatches or pp
+    if args.batch % mb:
+        raise SystemExit(f"--batch {args.batch} not divisible by "
+                         f"--microbatches {mb}")
+    spec = HP.PipelineSpec(pp, lps, microbatches=mb, schedule=args.schedule)
+    print(f"pipeline: stages={pp} layers/stage={lps} microbatches={mb} "
+          f"schedule={args.schedule}")
+
+    from ..models import model as M
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    stage_params, mask = HP.split_stage_params(params, cfg, spec)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 5))
+    step_fn = jax.jit(HP.make_spmd_pipeline_train_step(cfg, spec, mesh,
+                                                       opt))
+    state = (stage_params, adamw.init_opt_state(stage_params),
+             jnp.int32(0))
+
+    dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
+                      seed=1234 + args.seed)
+    loader = make_loader(cfg, dcfg)
+    tokens_per_step = args.batch * args.seq
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = next(loader)
+        toks = batch["tokens"].reshape(mb, args.batch // mb, args.seq)
+        state, m = step_fn(state, mask, {"tokens": toks})
+        if (i + 1) % args.log_every == 0 or i == 0:
+            dt = time.perf_counter() - t0
+            tgs = tokens_per_step * (i + 1) / dt / pp
+            print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
+                  f"TGS={tgs:.0f}", flush=True)
+    loader.close()
 
 
 def main():
@@ -34,6 +92,13 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--pipeline-parallel", type=int, default=1,
+                    help="run the shard_map pipeline over N stages")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=available_schedules(),
+                    help="pipeline schedule (with --pipeline-parallel)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="pipeline microbatches (default: = stages)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--seed", type=int, default=0)
@@ -46,6 +111,10 @@ def main():
     cfg = get_smoke_config(name) if args.smoke else get_config(name)
     print(f"arch={cfg.name} family={cfg.family} "
           f"params~{cfg.param_count() / 1e6:.1f}M devices={len(jax.devices())}")
+
+    if args.pipeline_parallel > 1:
+        run_pipeline(args, cfg)
+        return
 
     mesh = make_local_mesh(model=args.model_parallel)
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,

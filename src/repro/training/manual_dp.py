@@ -170,7 +170,8 @@ def make_manual_dp_train_step(cfg: ModelConfig, mesh: Mesh,
 
     def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
         bspec = jax.tree.map(lambda _: P(axis), batch)
-        f = jax.shard_map(
+        from ..core.jax_compat import shard_map
+        f = shard_map(
             step_fn, mesh=mesh,
             in_specs=(param_manual,
                       {"master": opt_manual, "m": opt_manual,
@@ -180,8 +181,7 @@ def make_manual_dp_train_step(cfg: ModelConfig, mesh: Mesh,
                        {"master": opt_manual, "m": opt_manual,
                         "v": opt_manual},
                        P()),
-            check_vma=False,
-            axis_names=set(da),
+            manual_axes=set(da),
         )
         # NOTE: partial-manual shard_map (manual over data, GSPMD-auto over
         # model) only lowers correctly under jit in jax 0.8

@@ -21,6 +21,13 @@ from repro.training.train_step import make_train_state, make_train_step
 
 
 def main():
+    if not hasattr(jax, "shard_map"):
+        # partial-manual shard_map (manual over data, GSPMD-auto over
+        # model) hard-crashes XLA (IsManualSubgroup CHECK) on legacy
+        # jaxlibs — the NOTE in repro.training.manual_dp
+        print("MANUAL_DP_SKIP: partial-manual shard_map needs jax>=0.8")
+        return
+
     cfg = dataclasses.replace(get_smoke_config("granite_8b"), dtype="float32")
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     opt = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)

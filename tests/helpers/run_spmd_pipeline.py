@@ -31,18 +31,30 @@ def main():
     tokens = jax.random.randint(key, (b, mb, S), 0, cfg.vocab_size)
 
     mesh = jax.make_mesh((4,), ("pipe",))
-    spec = HP.PipelineSpec(4, (1, 1, 0, 1), microbatches=b)
     # 4 stages over 2 layers won't sum; use padded non-uniform split of 2
     spec = HP.PipelineSpec(4, (1, 0, 0, 1), microbatches=b)
 
     stage_params, mask = HP.split_stage_params(params, cfg, spec)
-    loss_fn = HP.make_spmd_pipeline_loss(cfg, spec, mesh, remat=True)
-    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
-            else _null():
-        loss = loss_fn(stage_params, mask, tokens)
-    loss = float(loss)
+    losses = {}
+    for schedule in ("1f1b", "gpipe", "zb_h1"):
+        loss_fn = HP.make_spmd_pipeline_loss(cfg, spec, mesh, remat=True,
+                                             schedule=schedule)
+        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+                else _null():
+            losses[schedule] = float(loss_fn(stage_params, mask, tokens))
+    loss = losses["1f1b"]
+    # single-chunk schedules share the diagonal-stream injection order:
+    # identical program, bit-identical loss
+    assert losses["gpipe"] == loss == losses["zb_h1"], losses
 
-    # reference: monolithic forward loss over all microbatches
+    # interleaved needs a chunked parameter layout -> must be rejected
+    try:
+        HP.make_spmd_pipeline_loss(cfg, spec, mesh, schedule="interleaved")
+        raise AssertionError("interleaved accepted by SPMD runtime")
+    except NotImplementedError:
+        pass
+
+    # reference 1: monolithic forward loss over all microbatches
     ref_losses = []
     for i in range(b):
         batch = {"tokens": tokens[i]}
@@ -53,7 +65,26 @@ def main():
     print(f"pipeline_loss={loss:.6f} ref={ref:.6f} rel_err={err:.2e}")
     assert err < 2e-3, (loss, ref)
 
+    # reference 2: the schedule-ordered scan must match the sequential
+    # numerics oracle simulate_pipeline_forward per microbatch
+    sim_losses = []
+    for i in range(b):
+        logits, _ = HP.simulate_pipeline_forward(params, cfg, spec,
+                                                 {"tokens": tokens[i]})
+        toks = tokens[i]
+        targets = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+        lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        sim_losses.append(float(jnp.sum(nll * lmask) / jnp.sum(lmask)))
+    sim_ref = float(np.mean(sim_losses))
+    err_sim = abs(loss - sim_ref) / max(abs(sim_ref), 1e-9)
+    print(f"simulate_pipeline_forward ref={sim_ref:.6f} rel_err={err_sim:.2e}")
+    assert err_sim < 2e-3, (loss, sim_ref)
+
     # gradients flow through ppermute
+    loss_fn = HP.make_spmd_pipeline_loss(cfg, spec, mesh, remat=True)
     g = jax.grad(lambda sp: loss_fn(sp, mask, tokens))(stage_params)
     gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
     assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,72 @@
+"""Soft dependency on hypothesis (pinned in requirements-dev.txt).
+
+The tier-1 CPU image does not ship hypothesis, and a bare module-level
+``from hypothesis import ...`` used to kill the WHOLE ``pytest -x``
+collection with ModuleNotFoundError.  Test modules import
+``given/settings/st`` from here instead:
+
+* hypothesis installed  → the real engine, unchanged behaviour;
+* hypothesis missing    → a deterministic fallback that runs each
+  property test over a bounded grid of each strategy's examples, so the
+  example-based tests in the same module (and a useful slice of the
+  property coverage) keep running instead of being skipped wholesale.
+  Modules that truly need the full engine can still
+  ``pytest.importorskip("hypothesis")`` on top.
+
+Only the strategies this repo uses are emulated: ``sampled_from`` and
+``integers``.
+"""
+import functools
+import inspect
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(seq)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Strategy(sorted({min_value, mid, max_value}))
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            cap = getattr(fn, "_compat_max_examples",
+                          _DEFAULT_MAX_EXAMPLES)
+            combos = list(itertools.product(
+                *[s.examples for s in strategies]))
+            if len(combos) > cap:      # deterministic stride subsample
+                step = len(combos) / cap
+                combos = [combos[int(i * step)] for i in range(cap)]
+
+            @functools.wraps(fn)
+            def wrapper():
+                for combo in combos:
+                    fn(*combo)
+            # pytest resolves fixtures via inspect.signature, which follows
+            # __wrapped__ back to fn's (strategy-filled) parameters — hide it
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

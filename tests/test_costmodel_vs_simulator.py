@@ -4,7 +4,7 @@ iteration time must agree, plus cache_plan property tests."""
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import chips, heteroauto, schedule as SCH
@@ -15,20 +15,81 @@ CFG = get_config("h2_100b")
 
 
 @pytest.mark.parametrize("exp", ["Exp-A-1", "Exp-C-1"])
-def test_cost_model_agrees_with_event_simulator(exp):
+@pytest.mark.parametrize("sched", ["1f1b", "zb_h1"])
+def test_cost_model_agrees_with_event_simulator(exp, sched):
     spec = chips.EXPERIMENTS[exp]
     groups = chips.cluster(*spec["groups"])
     r = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
-                          two_stage=False)
+                          two_stage=False, schedule=sched)
     assert r.plan is not None
-    # closed form (alpha = 1, 1F1B)
+    assert r.plan.schedule == sched
+    # closed form (schedule-derived alpha)
     closed = r.cost.iter_time
     # event-driven replay with zero-cost transfers (the closed form has no
     # P2P term; DiComm latencies are added separately)
     tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(r.plan, CFG, 4096)
-    sim = SCH.simulate_1f1b(tf, tb, b, [0.0] * len(tp2p), t_update=tu)
+    sim = SCH.simulate(sched, tf, tb, b, [0.0] * len(tp2p), t_update=tu)
     rel = abs(sim.makespan - closed) / closed
     assert rel < 0.15, (closed, sim.makespan)
+
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1", "interleaved"])
+def test_alpha_per_schedule_agrees_with_simulator(sched):
+    """Uniform synthetic pipeline: the cost model's closed form
+    b·T + α·(S−1)·T must match the event-driven replay of the same
+    schedule's op lists."""
+    from repro.core.schedules import get_schedule
+    S, b, f, w = 4, 16, 1.0, 2.0
+    sch = get_schedule(sched)
+    assert sch.supports(S, b)
+    sim = SCH.simulate(sched, [f] * S, [w] * S, b, [0.0] * (S - 1))
+    closed = b * (f + w) + sch.alpha(S, b) * (S - 1) * (f + w)
+    rel = abs(sim.makespan - closed) / closed
+    assert rel < 0.05, (sched, closed, sim.makespan)
+
+
+def test_search_annotates_schedule_and_zb_wins_by_default():
+    spec = chips.EXPERIMENTS["Exp-A-1"]
+    groups = chips.cluster(*spec["groups"])
+    r = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                          two_stage=False)
+    r1 = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                           two_stage=False, schedule="1f1b")
+    assert r.plan is not None and r1.plan is not None
+    # default candidate set prefers the lower-alpha backward-split schedule
+    assert r.plan.schedule == "zb_h1"
+    assert r.cost.schedule == "zb_h1" and r.cost.alpha < 1.0
+    assert r.cost.iter_time < r1.cost.iter_time
+
+
+def test_zb_beats_1f1b_on_heterogeneous_4stage_fixture():
+    """Acceptance regression: backward-split scheduling yields strictly
+    lower simulated makespan than 1F1B on a heterogeneous 4-stage
+    pipeline (wgrad off the critical path, §5)."""
+    t_fwd = [1.0, 1.4, 0.8, 1.2]
+    t_bwd = [2.0, 2.8, 1.6, 2.4]
+    t_p2p = [0.05, 0.05, 0.05]
+    zb = SCH.simulate("zb_h1", t_fwd, t_bwd, 8, t_p2p)
+    f1 = SCH.simulate("1f1b", t_fwd, t_bwd, 8, t_p2p)
+    assert zb.makespan < f1.makespan, (zb.makespan, f1.makespan)
+    assert zb.bubble_frac < f1.bubble_frac
+
+
+def test_schedule_memory_profile_drives_feasibility():
+    """GPipe stashes all b microbatches; 1F1B min(b, S−k): the cost model
+    must charge GPipe more activation memory on the same plan."""
+    from repro.core.cost_model import evaluate
+    spec = chips.EXPERIMENTS["Exp-A-1"]
+    groups = chips.cluster(*spec["groups"])
+    r = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                          two_stage=False, schedule="1f1b")
+    assert r.plan is not None
+    c_1f1b = evaluate(r.plan, CFG, 4096, spec["gbs_tokens"])
+    c_gpipe = evaluate(r.plan, CFG, 4096, spec["gbs_tokens"],
+                       schedule="gpipe")
+    assert all(g >= f for g, f in
+               zip(c_gpipe.stage_mem_gb, c_1f1b.stage_mem_gb))
+    assert sum(c_gpipe.stage_mem_gb) > sum(c_1f1b.stage_mem_gb)
 
 
 def test_alpha_zero_is_zero_bubble_lower_bound():

@@ -69,6 +69,8 @@ def test_manual_dp_zero1_subprocess():
     r = subprocess.run([sys.executable, script], capture_output=True,
                        text=True, timeout=600, env=env, cwd=root)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    if "MANUAL_DP_SKIP" in r.stdout:
+        pytest.skip("partial-manual shard_map unsupported on this jax")
     assert "MANUAL_DP_OK" in r.stdout
 
 

@@ -7,7 +7,7 @@ import textwrap
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.resharding import boundary_time, naive_cost, sr_ag_cost
 from repro.core.schedule import simulate_1f1b, simulate_gpipe

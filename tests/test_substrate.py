@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpointing.io import load_checkpoint, save_checkpoint
 from repro.configs import get_smoke_config
@@ -97,7 +97,10 @@ def test_checkpoint_roundtrip(tmp_path):
 
 def _mesh():
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:   # legacy signature: tuple of (name, size) pairs
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_param_specs_divisibility_fallback():
