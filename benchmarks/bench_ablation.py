@@ -1,8 +1,9 @@
 """Paper Table 9 (+ Fig 12) — ablations on the Exp-C-1 configuration:
 relative iteration time of DDR vs TCP transport, HeteroPP vs uniform layer
 split, SR&AG resharding on/off, fine-grained overlap on/off, and pipeline
-SCHEDULE (GPipe / 1F1B / interleaved / ZB-H1 backward-split, the §5
-wgrad-overlap ablation) — replayed through the generic event-driven
+SCHEDULE (GPipe / 1F1B / interleaved / ZB-H1 / ZB-V, the §5 wgrad-overlap
+ablation; backward-split rows use the profiler's analytic per-stage
+dgrad/wgrad fractions) — replayed through the generic event-driven
 schedule simulator.
 
     PYTHONPATH=src python -m benchmarks.bench_ablation [--schedule 1f1b]

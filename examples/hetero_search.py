@@ -5,12 +5,17 @@
   3. search a HeteroPP plan (DFS + two-stage refinement, schedule as a
      search dimension),
   4. report HeteroSpeedupRatio (Fig 11) and replay the plan through the
-     schedule simulator with DiComm transports (Table 9 style).
+     schedule simulator with DiComm transports (Table 9 style),
+  5. optionally save the winning plan as JSON (``--save-plan plan.json``)
+     for ``launch/train.py --plan`` to execute on the real shard_map
+     pipeline.
 
     PYTHONPATH=src python examples/hetero_search.py \
-        [--cluster A:256,B:256,C:256] [--gbs-mtokens 6] [--schedule auto]
+        [--cluster A:256,B:256,C:256] [--gbs-mtokens 6] [--schedule auto] \
+        [--save-plan plan.json]
 """
 import argparse
+import json
 
 from repro.configs import get_config
 from repro.core import chips, heteroauto, schedule as SCH
@@ -28,6 +33,9 @@ def main():
                     choices=["auto"] + available_schedules(),
                     help="pipeline schedule ('auto' searches over the "
                          "default candidate set)")
+    ap.add_argument("--save-plan", default=None, metavar="PLAN.json",
+                    help="write the winning plan as JSON for "
+                         "launch/train.py --plan")
     args = ap.parse_args()
 
     cfg = get_config(args.model)
@@ -61,6 +69,11 @@ def main():
     print(f"\nHeteroAuto plan ({r.search_time_s:.2f}s, "
           f"{r.evaluated} configs):")
     print(" ", r.plan.describe())
+    if args.save_plan:
+        with open(args.save_plan, "w") as f:
+            json.dump(r.plan.to_dict(), f, indent=2)
+        print(f"  plan saved to {args.save_plan} "
+              f"(run: launch/train.py --plan {args.save_plan})")
     print(f"  iteration time: {r.cost.iter_time:.2f}s  TGS={r.tgs:.1f} "
           f"(schedule={r.plan.schedule}, α={r.cost.alpha:.2f})")
     # Fig 11 is an apples-to-apples metric: re-baseline the homogeneous

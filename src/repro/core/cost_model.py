@@ -7,11 +7,14 @@ pipeline-schedule bubble coefficient (1 for the paper's 1F1B, 0 for ZB-V).
 
 Both α and the memory-feasibility rule are now derived from the plan's
 :class:`~repro.core.schedules.Schedule` (DESIGN.md §4): α comes from the
-schedule's closed form (validated against the op-list derivation), and
-stage k's in-flight microbatch count comes from the schedule's memory
-profile — Observation #4's min(b, s_pp − k) is exactly the 1F1B/ZB-H1
-profile; GPipe stashes b, interleaved more.  Passing an explicit
-``alpha=`` overrides the schedule (legacy sweep path).
+schedule's closed form (validated against the op-list derivation — the
+shipped ``zb_v`` lands at f/(v(f+d+w)) = 1/6, the honest single-
+iteration residual of the paper's "0 for ZB-V"), and stage k's in-flight
+microbatch count comes from the schedule's memory profile —
+Observation #4's min(b, s_pp − k) is exactly the 1F1B/ZB-H1 profile;
+GPipe stashes b, interleaved its warmup/v, zb_v a flat min(b, S).
+Passing an explicit ``alpha=`` overrides the schedule (legacy sweep
+path).
 """
 from __future__ import annotations
 
@@ -66,6 +69,31 @@ class ParallelPlan:
                 f"{s.group.name}[pp={s.pp} tp={s.tp} l={s.layers} "
                 f"r={int(s.recompute)}]")
         return " ".join(parts)
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (``launch/train.py --plan`` /
+        ``examples/hetero_search.py --save-plan``).  Chip specs are stored
+        by catalog name and resolved through ``chips.CHIPS`` on load."""
+        return {
+            "dp": self.dp,
+            "microbatches": self.microbatches,
+            "schedule": self.schedule,
+            "stages": [{"chip": s.group.spec.name, "count": s.group.count,
+                        "label": s.group.label, "tp": s.tp, "pp": s.pp,
+                        "layers": s.layers, "recompute": s.recompute}
+                       for s in self.stages],
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "ParallelPlan":
+        from .chips import CHIPS, ChipGroup
+        stages = [StagePlan(ChipGroup(CHIPS[sd["chip"]], sd["count"],
+                                      sd.get("label", "")),
+                            sd["tp"], sd["pp"], sd["layers"],
+                            sd["recompute"])
+                  for sd in d["stages"]]
+        return ParallelPlan(stages, d["dp"], d["microbatches"],
+                            d.get("schedule", "1f1b"))
 
 
 @dataclasses.dataclass

@@ -35,9 +35,13 @@ from .cost_model import (ParallelPlan, PlanCost, StagePlan, assign_layers,
 from .schedules import ScheduleLike, get_schedule
 from ..models.config import ModelConfig
 
-# default schedule candidates: ZB-H1 dominates 1F1B at equal memory, but
-# 1F1B is kept as the fallback for exotic (S, b) shapes
-DEFAULT_SCHEDULES: Tuple[str, ...] = ("zb_h1", "1f1b")
+# default schedule candidates, visited in ascending-α order: ZB-V
+# (α=1/6, flat min(b,S) memory) > interleaved (α=1/2, warmup-heavy
+# memory, needs b % S == 0) > ZB-H1 (α=2/3 at 1F1B memory) > 1F1B (the
+# fallback for exotic (S, b) shapes).  All four now execute for real on
+# the SPMD runtime (heteropp.spmd_tick_tables), and every candidate has
+# closed-form α AND inflight, so each evaluate stays O(1).
+DEFAULT_SCHEDULES: Tuple[str, ...] = ("zb_v", "interleaved", "zb_h1", "1f1b")
 
 
 @dataclasses.dataclass

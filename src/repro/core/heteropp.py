@@ -1,6 +1,7 @@
 """HeteroPP runtime — heterogeneous pipeline parallelism in JAX.
 
-Two execution paths (DESIGN.md §2 explains the SPMD constraint):
+Two execution paths (DESIGN.md §2 explains the SPMD constraint, §7 the
+schedule/runtime contract):
 
 * ``simulate_*``   — sequential per-stage execution on the local device(s),
   bit-identical to the monolithic model: the numerics oracle for tests and
@@ -9,24 +10,31 @@ Two execution paths (DESIGN.md §2 explains the SPMD constraint):
 * ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe``/``pod`` axis
   with GSPMD left automatic over ``data``/``model``: every device runs the
   same program; per-stage *data* (padded stacked layer weights) differs.
-  Microbatches stream through a circular scan whose tick→microbatch
-  mapping is generated from the plan's ``repro.core.schedules`` Schedule
-  (the per-stage forward op order must be a diagonal stream — true for
-  gpipe/1f1b/zb_h1; multi-chunk interleaved schedules are rejected).
-  Stage-to-stage activation transfer is ``jax.lax.ppermute`` (the DiComm
-  device-direct analogue).  Backward is derived by autodiff through the
-  scan + ppermute — a GPipe-memory schedule with per-layer remat;
-  1F1B/ZB-V bubble behaviour is modeled by the cost model's α and the
-  generic schedule simulator.
+  Each pipe member holds ONE physical stage — ``n_chunks`` (v) chunk
+  slots of layers for virtual-stage schedules, stacked ``(S, v, Lcmax,
+  ...)``; single-chunk specs keep the flat ``(S, Lmax, ...)`` layout.
+  Microbatches stream through a tick-synchronous scan whose static
+  tick→(microbatch, chunk, route) program is derived from the plan's
+  ``repro.core.schedules`` Schedule by :func:`spmd_tick_tables`:
+  gpipe/1f1b/zb_h1 are the single-chunk diagonal stream, ``interleaved``
+  streams chunk-major with a circular wrap S−1 → 0, ``zb_v`` zig-zags
+  the V placement with a device-local turn.  Stage-to-stage activation
+  transfer is ``jax.lax.ppermute`` (the DiComm device-direct analogue),
+  one hop each way per tick.  Backward is derived by autodiff through
+  the scan + ppermute — a GPipe-memory schedule with per-layer remat;
+  1F1B/ZB-H1/ZB-V bubble *timing* is modeled by the cost model's α
+  closed forms (gpipe/1f1b 1, zb_h1 2/3, interleaved 1/v, zb_v 1/6) and
+  the generic schedule simulator, and the schedules' in-flight memory
+  profiles (gpipe b, 1f1b/zb_h1 min(b, S−k), interleaved warmup/v, zb_v
+  min(b, S)) drive the cost model's feasibility check.
 
-Non-uniform layer counts: stages are padded to max layers/stage and masked
-per-stage (idle compute on short stages is the price of SPMD; HeteroAuto's
-cost model accounts the true per-stage time).
+Non-uniform layer counts: global chunk-stages are padded to the max
+layer count and masked (idle compute on short stages is the price of
+SPMD; HeteroAuto's cost model accounts the true per-stage time).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,18 +51,29 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class PipelineSpec:
+    """Runtime pipeline layout.
+
+    ``num_stages`` is the PHYSICAL pipe-axis size S.  ``layers_per_stage``
+    is indexed by GLOBAL chunk-stage g in ascending model-layer order
+    (length S·n_chunks; for single-chunk schedules g == physical stage).
+    The schedule's chunk placement decides which physical stage hosts
+    which global chunk-stage (``Schedule.global_stage`` — chunk-major for
+    interleaved, V-shaped for zb_v).  ``recompute`` stays per PHYSICAL
+    stage."""
     num_stages: int
-    layers_per_stage: Tuple[int, ...]     # non-uniform (HeteroPP)
+    layers_per_stage: Tuple[int, ...]     # per global chunk-stage
     microbatches: int
-    recompute: Tuple[bool, ...] = ()      # per-stage (simulate/cost model)
+    recompute: Tuple[bool, ...] = ()      # per physical stage
     pipe_axis: str = "pipe"
     schedule: str = "1f1b"                # repro.core.schedules name
+    n_chunks: int = 1                     # virtual stages per device (v)
 
     def __post_init__(self):
-        assert len(self.layers_per_stage) == self.num_stages
+        assert len(self.layers_per_stage) == self.num_stages * self.n_chunks
         if not self.recompute:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
+        assert len(self.recompute) == self.num_stages
 
     @property
     def total_layers(self) -> int:
@@ -66,48 +85,103 @@ class PipelineSpec:
 
 
 def from_plan(plan, microbatches: Optional[int] = None) -> PipelineSpec:
-    """Build a runtime PipelineSpec from a HeteroAuto ParallelPlan."""
-    lps, rec = [], []
+    """Build a runtime PipelineSpec from a HeteroAuto ParallelPlan.
+
+    For chunked schedules (``interleaved``, ``zb_v``) each physical
+    stage's layer allotment is split across its v chunk slots (earlier
+    slots take the remainder) and laid out in ascending global-stage
+    order, so the model's layer order follows the schedule's chunk
+    placement and the searched non-uniform split survives intact."""
+    from .schedules import get_schedule
+    sched = get_schedule(plan.schedule)
+    v = sched.n_chunks
+    phys, rec = [], []
     for s in plan.stages:
         per = s.layers_per_stage
         left = s.layers
         for _ in range(s.pp):
             take = min(per, left)
-            lps.append(take)
+            phys.append(take)
             rec.append(s.recompute)
             left -= take
-    return PipelineSpec(len(lps), tuple(lps), microbatches or plan.microbatches,
-                        tuple(rec), schedule=plan.schedule)
+    return PipelineSpec(len(phys), chunk_layer_counts(phys, sched),
+                        microbatches or plan.microbatches,
+                        tuple(rec), schedule=plan.schedule, n_chunks=v)
+
+
+def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
+    """Split per-physical-stage layer counts across a schedule's chunk
+    slots (earlier slots take the remainder), returning per-global-stage
+    counts in ascending-g order — the ``PipelineSpec.layers_per_stage``
+    layout."""
+    from .schedules import get_schedule
+    sched = get_schedule(schedule)
+    v, S = sched.n_chunks, len(phys)
+    if v == 1:
+        return tuple(phys)
+    counts = [0] * (S * v)
+    for s, l in enumerate(phys):
+        base, extra = divmod(l, v)
+        for k in range(v):
+            counts[sched.global_stage(s, k, S)] = \
+                base + (1 if k < extra else 0)
+    return tuple(counts)
 
 
 # ---------------------------------------------------------------------------
 # stage parameter construction
 # ---------------------------------------------------------------------------
 
+def _spec_schedule(spec: PipelineSpec):
+    from .schedules import get_schedule
+    sched = get_schedule(spec.schedule)
+    assert sched.n_chunks == spec.n_chunks, \
+        (sched.name, sched.n_chunks, spec.n_chunks)
+    return sched
+
+
 def split_stage_params(params: PyTree, cfg: ModelConfig, spec: PipelineSpec
                        ) -> Tuple[PyTree, jnp.ndarray]:
-    """Split stacked block params (L, ...) into padded (S, Lmax, ...) plus a
-    per-stage validity mask (S, Lmax).  Embedding/final-norm params are
-    replicated to every stage (stage 0 uses embed, last uses unembed)."""
+    """Split stacked block params (L, ...) into the padded per-stage layout
+    plus a validity mask: ``(S, Lmax, ...)`` / mask ``(S, Lmax)`` for
+    single-chunk specs, ``(S, v, Lcmax, ...)`` / mask ``(S, v, Lcmax)``
+    for chunked ones — slot k of stage s holds the layers of global
+    chunk-stage ``schedule.global_stage(s, k, S)``.  Embedding/final-norm
+    params are replicated to every stage (injection ops use embed, the
+    last global stage unembeds)."""
     L = cfg.num_layers
-    S, Lmax = spec.num_stages, spec.max_layers
+    S, v, Lmax = spec.num_stages, spec.n_chunks, spec.max_layers
     assert spec.total_layers == L, (spec.layers_per_stage, L)
+    counts = spec.layers_per_stage
+    bounds = np.cumsum([0] + list(counts))
 
-    bounds = np.cumsum([0] + list(spec.layers_per_stage))
-    mask = np.zeros((S, Lmax), np.bool_)
-    for s in range(S):
-        mask[s, : spec.layers_per_stage[s]] = True
+    def pad_part(leaf, g):
+        part = leaf[bounds[g]:bounds[g + 1]]
+        pad = Lmax - part.shape[0]
+        if pad:
+            part = jnp.pad(part, [(0, pad)] + [(0, 0)] * (leaf.ndim - 1))
+        return part
 
-    def split(leaf):
-        pads = [(0, 0)] * (leaf.ndim)
-        out = []
+    if v == 1:
+        mask = np.zeros((S, Lmax), np.bool_)
         for s in range(S):
-            part = leaf[bounds[s]:bounds[s + 1]]
-            pad = Lmax - part.shape[0]
-            if pad:
-                part = jnp.pad(part, [(0, pad)] + [(0, 0)] * (leaf.ndim - 1))
-            out.append(part)
-        return jnp.stack(out)                        # (S, Lmax, ...)
+            mask[s, : counts[s]] = True
+
+        def split(leaf):
+            return jnp.stack([pad_part(leaf, s) for s in range(S)])
+    else:
+        sched = _spec_schedule(spec)
+        gmap = [[sched.global_stage(s, k, S) for k in range(v)]
+                for s in range(S)]
+        mask = np.zeros((S, v, Lmax), np.bool_)
+        for s in range(S):
+            for k in range(v):
+                mask[s, k, : counts[gmap[s][k]]] = True
+
+        def split(leaf):
+            return jnp.stack([
+                jnp.stack([pad_part(leaf, gmap[s][k]) for k in range(v)])
+                for s in range(S)])                  # (S, v, Lcmax, ...)
 
     stage_params = {
         "blocks": jax.tree.map(split, params["blocks"]),
@@ -149,35 +223,153 @@ def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool):
 # SPMD pipeline (shard_map over the pipe axis)
 # ---------------------------------------------------------------------------
 
+# routing codes for TickTables.src: where a stage's input comes from
+SRC_INJECT, SRC_PREV, SRC_NEXT, SRC_LOCAL = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TickTables:
+    """Static tick→(microbatch, chunk, route) program for the SPMD scan
+    (DESIGN.md §7): entry [t, s] says what physical stage s computes at
+    tick t — which microbatch, which local chunk slot, and whether its
+    input is a fresh injection (embed), the previous/next pipe member's
+    tick-(t−1) output, or the stage's own."""
+    ticks: int
+    mb: np.ndarray       # (ticks, S) int32  microbatch index
+    chunk: np.ndarray    # (ticks, S) int32  local chunk slot
+    src: np.ndarray      # (ticks, S) int32  SRC_* routing code
+    active: np.ndarray   # (ticks, S) bool
+    emit: np.ndarray     # (ticks, S) bool   op is the last global stage
+
+
+def spmd_tick_tables(schedule, num_stages: int, microbatches: int
+                     ) -> TickTables:
+    """Derive the SPMD scan's static program from a Schedule's op lists.
+
+    The scan is tick-synchronous: one chunk-forward per pipe member per
+    tick, then activations shift one hop each way via ``ppermute``.  A
+    schedule is executable iff (DESIGN.md §7):
+
+    * replaying each stage's forward op order greedily assigns every
+      F(m, g) the tick EXACTLY one after F(m, g−1) — a *tight stream*.
+      There is no buffering: a value not consumed the tick after it
+      arrives is overwritten by the next permute;
+    * every hop g−1 → g lands on the same device or a (circular) ±1
+      neighbor, so one forward and one backward permute cover all routes.
+
+    gpipe/1f1b/zb_h1 are the single-chunk diagonal special case (stage
+    s's i-th forward at tick s+i); ``interleaved`` streams chunk-major
+    with the circular wrap S−1 → 0; ``zb_v`` zig-zags down and back up
+    the V with a device-local turn at g = S−1 → S.
+
+    Because the stream is tight, microbatch m's whole forward chain is
+    rigid — T(m, g) = t0(m) + g — so the per-stage op orders reduce to a
+    system of difference constraints on the injection ticks t0:
+    consecutive ops (m, g) then (m', g') on one stage need
+    t0(m') ≥ t0(m) + g − g' + 1.  The least solution (relaxation to a
+    fixed point) is the earliest executable tick program; an unsatisfiable
+    system (positive cycle — e.g. per-stage forward orders that disagree
+    with any single stream) is rejected.
+    """
+    from .schedules import get_schedule
+    sched = get_schedule(schedule)
+    S, b, v = num_stages, microbatches, sched.n_chunks
+    G = S * v
+    if not sched.supports(S, b):
+        raise ValueError(f"schedule {sched.name!r} does not support "
+                         f"S={S}, b={b}")
+    f_rows = [[op for op in row if op.kind == "F"]
+              for row in sched.ops(S, b)]
+    for s in range(S):
+        want = sorted((m, k) for k in range(v) for m in range(b))
+        got = sorted((op.mb, op.chunk) for op in f_rows[s])
+        if got != want:
+            raise NotImplementedError(
+                f"schedule {sched.name!r}: stage {s} forward ops do not "
+                f"cover every (microbatch, chunk) exactly once "
+                f"(DESIGN.md §7 invariant 1)")
+
+    # difference constraints t0[m'] >= t0[m] + w from per-stage op order
+    cons = []
+    for s in range(S):
+        row = f_rows[s]
+        for a, c in zip(row, row[1:]):
+            w = sched.global_stage(s, a.chunk, S) \
+                - sched.global_stage(s, c.chunk, S) + 1
+            if a.mb == c.mb:
+                if w > 0:
+                    raise NotImplementedError(
+                        f"schedule {sched.name!r}: stage {s} orders "
+                        f"F(mb={a.mb}) chunks against the forward chain")
+                continue
+            cons.append((a.mb, c.mb, w))
+    t0 = [0] * b
+    for _ in range(b + 2):
+        changed = False
+        for m, m2, w in cons:
+            if t0[m2] < t0[m] + w:
+                t0[m2] = t0[m] + w
+                changed = True
+        if not changed:
+            break
+    else:
+        raise NotImplementedError(
+            f"schedule {sched.name!r}: per-stage forward orders admit no "
+            f"tight tick-synchronous stream (cyclic ordering constraints)")
+
+    tick_of: Dict[Tuple[int, int], int] = {
+        (m, g): t0[m] + g for m in range(b) for g in range(G)}
+    ticks = max(tick_of.values()) + 1
+    slot_of = {sched.global_stage(s, k, S): k
+               for s in range(S) for k in range(v)}
+    mb = np.zeros((ticks, S), np.int32)
+    chunk = np.zeros((ticks, S), np.int32)
+    src = np.full((ticks, S), SRC_PREV, np.int32)
+    active = np.zeros((ticks, S), np.bool_)
+    emit = np.zeros((ticks, S), np.bool_)
+    for (m, g), t in tick_of.items():
+        s = sched.device_of(g, S)
+        assert not active[t, s], \
+            (sched.name, "two ops on one stage in one tick", t, s)
+        mb[t, s] = m
+        chunk[t, s] = slot_of[g]
+        active[t, s] = True
+        emit[t, s] = g == G - 1
+        if g == 0:
+            src[t, s] = SRC_INJECT
+        else:
+            d_prev = sched.device_of(g - 1, S)
+            if d_prev == s:
+                src[t, s] = SRC_LOCAL
+            elif d_prev == (s - 1) % S:
+                src[t, s] = SRC_PREV
+            elif d_prev == (s + 1) % S:
+                src[t, s] = SRC_NEXT
+            else:
+                raise NotImplementedError(
+                    f"schedule {sched.name!r}: hop g={g - 1}->{g} spans "
+                    f"non-adjacent stages {d_prev}->{s}")
+    return TickTables(ticks, mb, chunk, src, active, emit)
+
+
 def schedule_injection_order(schedule, num_stages: int, microbatches: int
                              ) -> List[int]:
-    """Tick→microbatch mapping for the SPMD circular scan, generated from
-    a ``repro.core.schedules`` Schedule.
-
-    The scan is tick-synchronous: at tick t stage s consumes what stage
-    s−1 produced at tick t−1, so stage s's i-th forward must be the same
-    microbatch as stage 0's i-th forward — a diagonal stream whose only
-    degree of freedom is the stage-0 injection order.  gpipe/1f1b/zb_h1
-    all satisfy this (identical forward order per stage); multi-chunk
-    interleaved schedules do not fit a single-stage-per-device scan and
-    are rejected (DESIGN.md §6).
-    """
+    """Stage-0 injection order for SINGLE-chunk schedules — the diagonal-
+    stream special case of :func:`spmd_tick_tables` (stage s's i-th
+    forward at tick s+i, so the only degree of freedom is the order
+    microbatches enter stage 0).  Kept as the compact view for tests and
+    diagnostics; the runtime itself consumes the full tick tables, which
+    also cover multi-chunk (interleaved / zb_v) schedules."""
     from .schedules import get_schedule
     sched = get_schedule(schedule)
     if sched.n_chunks != 1:
         raise NotImplementedError(
-            f"schedule {sched.name!r}: the SPMD runtime maps one stage per "
-            f"pipe-axis member; virtual-stage (chunked) schedules need a "
-            f"chunked parameter layout")
-    forder = [[op.mb for op in row if op.kind == "F"]
-              for row in sched.ops(num_stages, microbatches)]
-    inj = forder[0]
+            f"schedule {sched.name!r} is chunked (v={sched.n_chunks}); "
+            f"there is no single injection order — use spmd_tick_tables")
+    tables = spmd_tick_tables(sched, num_stages, microbatches)
+    inj = [int(tables.mb[t, 0]) for t in range(tables.ticks)
+           if tables.active[t, 0]]
     assert sorted(inj) == list(range(microbatches)), (sched.name, inj)
-    for s, row in enumerate(forder):
-        if row != inj:
-            raise NotImplementedError(
-                f"schedule {sched.name!r}: stage {s} forward order {row} "
-                f"is not the diagonal stream of stage 0 ({inj})")
     return inj
 
 
@@ -185,72 +377,131 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                             *, remat: bool = True,
                             schedule: Optional[str] = None):
     """Returns loss_fn(stage_params, mask, tokens) -> scalar loss, where
-    inside ``shard_map`` each pipe-axis member holds ONE stage.
+    inside ``shard_map`` each pipe-axis member holds ONE physical stage
+    (v chunk slots of layers for chunked schedules).
 
-    tokens: (b, mb_size, S_seq) — b microbatches, streamed in the
-    schedule's injection order (validated against the scan constraint).
+    tokens: (b, mb_size, S_seq) — b microbatches, streamed through the
+    schedule's static tick program (:func:`spmd_tick_tables`): per tick
+    each member runs one chunk-forward on the microbatch the tables name,
+    reading its input from a fresh embedding, a ±1 pipe neighbor, or its
+    own previous output (the zb_v turn).
     """
     kind = M._block_kind(cfg)
     axis = spec.pipe_axis
     nstages = spec.num_stages
+    v = spec.n_chunks
     b = spec.microbatches
-    ticks = b + nstages - 1
-    inj = schedule_injection_order(schedule or spec.schedule, nstages, b)
-    inj_arr = jnp.asarray(inj, jnp.int32)
+    from .schedules import get_schedule
+    sched = get_schedule(schedule or spec.schedule)
+    if sched.n_chunks != v:
+        raise ValueError(
+            f"schedule {sched.name!r} has n_chunks={sched.n_chunks} but the "
+            f"PipelineSpec was laid out with n_chunks={v}; rebuild the spec "
+            f"for this schedule (from_plan does this automatically)")
+    if v > 1 and sched.name != spec.schedule:
+        ref = _spec_schedule(spec)
+        for s in range(nstages):
+            for k in range(v):
+                if sched.global_stage(s, k, nstages) != \
+                        ref.global_stage(s, k, nstages):
+                    raise ValueError(
+                        f"schedule {sched.name!r} places chunks differently "
+                        f"from the spec's {spec.schedule!r}; the parameter "
+                        f"layout is placement-specific")
+    tables = spmd_tick_tables(sched, nstages, b)
+    # static routing facts: skip permutes/branches/wrap edges no tick
+    # ever uses (single-chunk schedules keep the old one-permute,
+    # no-wrap program)
+    used = set(np.unique(tables.src[tables.active]))
+    needs_prev = SRC_PREV in used
+    needs_next = SRC_NEXT in used
+    needs_local = SRC_LOCAL in used
+    wraps_prev = bool(np.any(tables.active[:, 0]
+                             & (tables.src[:, 0] == SRC_PREV)))
+    wraps_next = bool(np.any(tables.active[:, -1]
+                             & (tables.src[:, -1] == SRC_NEXT)))
+    xs = (jnp.asarray(tables.mb), jnp.asarray(tables.chunk),
+          jnp.asarray(tables.src), jnp.asarray(tables.active),
+          jnp.asarray(tables.emit))
 
     def stage_loss(stage_params, mask, tokens):
         # Inside shard_map: leading stage dim is local (size 1) -> squeeze.
         blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
-        mask_row = mask[0]
+        mask_dev = mask[0]           # (Lmax,) or (v, Lcmax)
         embed = stage_params["embed"]
         fnorm = stage_params["final_norm"]
         sid = jax.lax.axis_index(axis)
-        is_first = sid == 0
-        is_last = sid == nstages - 1
 
         mb_size, S_seq = tokens.shape[1], tokens.shape[2]
         d = cfg.d_model
         dtype = layers.dtype_of(cfg)
 
-        def tick(carry, t):
-            x_in, loss_acc, aux_acc, denom = carry
-            # schedule-aware tick→microbatch mapping: position in the
-            # stream is t - sid; the injection order array turns it into
-            # the microbatch id (identity for gpipe/1f1b/zb_h1)
-            mb_idx = inj_arr[jnp.clip(t - sid, 0, b - 1)]
+        def tick(carry, row):
+            x_prev, x_next, y_loc, loss_acc, aux_acc, denom = carry
+            mb_row, ck_row, src_row, act_row, emit_row = row
+            mb_idx = jnp.take(mb_row, sid)
+            src = jnp.take(src_row, sid)
+            active = jnp.take(act_row, sid)
+            take = active & jnp.take(emit_row, sid)
             toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
                                                 keepdims=False)
-            # stage 0 injects the embedded microbatch; others use received x
+            # route the input: fresh embedding for injection ops, else the
+            # neighbor (or own, for the zb_v turn) output of tick t-1
             x0 = layers.embed_tokens(embed, toks).astype(dtype)
-            x = jnp.where(is_first, x0, x_in)
-            active = (t - sid >= 0) & (t - sid < b)
-            y, aux = _stage_forward(blocks, mask_row, cfg, x, kind, remat)
-            # last stage computes the LM loss for its finished microbatch
+            x = jnp.where(src == SRC_INJECT, x0, x_prev)
+            if needs_next:
+                x = jnp.where(src == SRC_NEXT, x_next, x)
+            if needs_local:
+                x = jnp.where(src == SRC_LOCAL, y_loc, x)
+            if v > 1:
+                ck = jnp.take(ck_row, sid)
+                blk = jax.tree.map(
+                    lambda p: jax.lax.dynamic_index_in_dim(
+                        p, ck, 0, keepdims=False), blocks)
+                mrow = jax.lax.dynamic_index_in_dim(mask_dev, ck, 0,
+                                                    keepdims=False)
+            else:
+                blk, mrow = blocks, mask_dev
+            y, aux = _stage_forward(blk, mrow, cfg, x, kind, remat)
+            # the member hosting the last global stage computes the LM
+            # loss for its finished microbatch
             h = layers.apply_norm(fnorm, y, cfg.norm)
             targets = jnp.concatenate(
                 [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
             lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
             ce = M.chunked_ce(embed, h, targets, lmask)
-            take = active & is_last
             loss_acc = loss_acc + jnp.where(take, ce, 0.0)
             denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
             aux_acc = aux_acc + jnp.where(active, aux, 0.0)
-            # shift activations down the pipe for the next tick
-            perm = [(i, i + 1) for i in range(nstages - 1)]
-            x_next = jax.lax.ppermute(y, axis, perm)
-            return (x_next, loss_acc, aux_acc, denom), None
+            # shift activations one hop each way for the next tick
+            if needs_prev:
+                perm_f = [(i, (i + 1) % nstages)
+                          for i in range(nstages if wraps_prev
+                                         else nstages - 1)]
+                x_prev2 = jax.lax.ppermute(y, axis, perm_f)
+            else:
+                x_prev2 = x_prev
+            if needs_next:
+                perm_b = [(i, i - 1) for i in range(1, nstages)]
+                if wraps_next:
+                    perm_b.append((0, nstages - 1))
+                x_next2 = jax.lax.ppermute(y, axis, perm_b)
+            else:
+                x_next2 = x_next
+            y_loc2 = y if needs_local else y_loc
+            return (x_prev2, x_next2, y_loc2, loss_acc, aux_acc, denom), None
 
         # accumulators are rank-1 (see _stage_forward): the zero inits are
         # closed-over constants that shard_map lifts to implicit
         # pipe-named inputs, and rank-0 ones cannot be transposed
         x_init = jnp.zeros((mb_size, S_seq, d), dtype)
         zero = jnp.zeros((1,), jnp.float32)
-        carry = (x_init, zero, zero, zero)
-        (x_last, loss_sum, aux_sum, denom), _ = jax.lax.scan(
-            tick, carry, jnp.arange(ticks))
-        # broadcast the last stage's loss to every pipe member; emit one
-        # (identical, shape-(1,)) copy per member — a replicated scalar
-        # out_spec does not transpose under the legacy shard_map API
+        carry = (x_init, x_init, x_init, zero, zero, zero)
+        (_, _, _, loss_sum, aux_sum, denom), _ = jax.lax.scan(
+            tick, carry, xs)
+        # broadcast the emitting member's loss to every pipe member; emit
+        # one (identical, shape-(1,)) copy per member — a replicated
+        # scalar out_spec does not transpose under the legacy shard_map
         loss_sum = jax.lax.psum(loss_sum, axis)
         denom = jax.lax.psum(denom, axis)
         aux_sum = jax.lax.psum(aux_sum, axis) / nstages
@@ -304,16 +555,26 @@ def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
 def simulate_pipeline_forward(params: PyTree, cfg: ModelConfig,
                               spec: PipelineSpec, batch: Dict[str, jnp.ndarray]
                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Run the pipeline stage-by-stage on the local device; must equal the
-    monolithic ``M.forward`` exactly (tested)."""
+    """Run the pipeline global-stage-by-global-stage on the local device
+    (following the schedule's chunk placement for chunked specs); must
+    equal the monolithic ``M.forward`` exactly (tested)."""
     stage_params, mask = split_stage_params(params, cfg, spec)
     kind = M._block_kind(cfg)
     tokens = batch["tokens"]
     x = layers.embed_tokens(params["embed"], tokens)
     aux_total = jnp.float32(0)
-    for s in range(spec.num_stages):
-        blocks = jax.tree.map(lambda t: t[s], stage_params["blocks"])
-        x, aux = _stage_forward(blocks, mask[s], cfg, x, kind,
+    S, v = spec.num_stages, spec.n_chunks
+    sched = _spec_schedule(spec) if v > 1 else None
+    for g in range(S * v):
+        if v == 1:
+            s, sel, mrow = g, (g,), mask[g]
+        else:
+            s = sched.device_of(g, S)
+            k = next(k for k in range(v)
+                     if sched.global_stage(s, k, S) == g)
+            sel, mrow = (s, k), mask[s, k]
+        blocks = jax.tree.map(lambda t: t[sel], stage_params["blocks"])
+        x, aux = _stage_forward(blocks, mrow, cfg, x, kind,
                                 remat=spec.recompute[s])
         aux_total = aux_total + aux
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)

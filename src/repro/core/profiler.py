@@ -42,6 +42,19 @@ class LayerProfile:
     layer_param_bytes: float     # per chip (already / tp)
     act_bytes: float             # saved per microbatch w/o recompute (/ tp)
     act_boundary_bytes: float    # saved per microbatch w/ recompute
+    # fraction of t_bwd that is WEIGHT gradient, from the layer's analytic
+    # op mix: every parameter matmul backward splits 1:1 into dgrad+wgrad,
+    # attention score/PV ops are weight-free (pure dgrad), and the TP
+    # collectives ride the activation-gradient (dgrad) path.  Feeds the
+    # backward-split schedules (zb_h1/zb_v) per stage.
+    wgrad_frac: float = 0.5
+
+
+@functools.lru_cache(maxsize=512)
+def score_flops_per_token(cfg: ModelConfig) -> float:
+    """Attention score + PV matmul FLOPs per token per layer — the ops
+    with NO weight operand, whose backward is pure dgrad."""
+    return 2 * 2 * (cfg.max_seq_len / 2) * cfg.num_heads * cfg.head_dim
 
 
 @functools.lru_cache(maxsize=512)
@@ -49,7 +62,7 @@ def layer_flops_per_token(cfg: ModelConfig) -> float:
     """Forward FLOPs per token per layer (matmuls, incl. causal attention)."""
     d = cfg.d_model
     attn = 2 * d * (cfg.num_heads + cfg.num_kv_heads * 2 + cfg.num_heads) * cfg.head_dim
-    attn += 2 * 2 * (cfg.max_seq_len / 2) * cfg.num_heads * cfg.head_dim  # scores+PV, causal
+    attn += score_flops_per_token(cfg)               # scores+PV, causal
     if cfg.is_moe:
         ff = 2 * (3 if cfg.mlp in ("swiglu", "geglu", "glu") else 2) * \
             d * cfg.d_ff * cfg.experts_per_token
@@ -73,19 +86,26 @@ def layer_param_count(cfg: ModelConfig) -> float:
 
 @functools.lru_cache(maxsize=4096)
 def _analytic_layer_profile_cached(chip: ChipSpec, cfg_key: str, tp: int,
-                                   seq_len: int, fl_fwd: float, params: float,
+                                   seq_len: int, fl_fwd: float,
+                                   fl_score: float, params: float,
                                    d_model: int) -> LayerProfile:
     t_fwd_compute = fl_fwd / (tp * chip.peak_flops * chip.mfu)
     ar_bytes = 2 * seq_len * d_model * BYTES_ACT * 2 * (tp - 1) / max(tp, 1)
     tp_comm = ar_bytes / chip.intra_node_bw if tp > 1 else 0.0
+    # backward op mix: each parameter matmul (flops P = fl_fwd − fl_score)
+    # contributes one dgrad and one wgrad matmul, the weight-free score
+    # ops (fl_score) two dgrad matmuls, collectives ride dgrad
+    t_bwd = 2 * t_fwd_compute + 2 * tp_comm
+    t_wgrad = (fl_fwd - fl_score) / (tp * chip.peak_flops * chip.mfu)
     return LayerProfile(
         t_fwd=t_fwd_compute + tp_comm,
-        t_bwd=2 * t_fwd_compute + 2 * tp_comm,
+        t_bwd=t_bwd,
         t_recomp=t_fwd_compute + tp_comm,
         tp_comm=tp_comm,
         layer_param_bytes=params * 2 / tp,
         act_bytes=ACT_FACTOR * seq_len * d_model * BYTES_ACT / tp,
         act_boundary_bytes=ACT_BOUNDARY * seq_len * d_model * BYTES_ACT,
+        wgrad_frac=t_wgrad / t_bwd if t_bwd > 0 else 0.5,
     )
 
 
@@ -95,6 +115,7 @@ def analytic_layer_profile(chip: ChipSpec, cfg: ModelConfig, tp: int,
     (memoized — the search calls this millions of times)."""
     return _analytic_layer_profile_cached(
         chip, cfg.name, tp, seq_len, layer_flops_per_token(cfg) * seq_len,
+        score_flops_per_token(cfg) * seq_len,
         layer_param_count(cfg), cfg.d_model)
 
 

@@ -43,20 +43,24 @@ def simulate_gpipe(t_fwd, t_bwd, microbatches, t_p2p, *, overlap=True,
 
 def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
                             transport="device_rdma", resharding="sr_ag"):
-    """Expand a ParallelPlan into per-STAGE fwd/bwd/p2p times.
+    """Expand a ParallelPlan into per-STAGE fwd/bwd/p2p times plus the
+    per-stage dgrad/wgrad decomposition.
 
-    ``t_bwd`` is the FULL backward time per stage; the dgrad/wgrad
-    decomposition (§5's recompute+dgrad+wgrad interleaving) is a property
-    of the backward-split schedules (``zb_h1``) and is applied inside the
-    simulator via ``wgrad_frac`` — the former ``split_backward`` flag here
-    was a no-op and has been removed.
+    ``t_bwd`` is the FULL backward time per stage; the last returned
+    element is the per-stage ``wgrad_frac`` — the profiler splits each
+    stage's backward analytically by its op mix (parameter matmuls split
+    1:1 dgrad/wgrad, weight-free attention score ops are pure dgrad, TP
+    collectives ride the dgrad path), so stages with different tp degrees
+    get different fractions.  Backward-split schedules (``zb_h1``,
+    ``zb_v``) consume it inside the simulator; single-``B`` schedules
+    ignore it.
     """
     from .cost_model import stage_profiles
     from .resharding import boundary_time
     from ..comm.latency import p2p_latency
 
     profs = stage_profiles(plan, cfg, seq_len)
-    t_fwd, t_bwd, t_upd, tps, specs = [], [], [], [], []
+    t_fwd, t_bwd, t_upd, wfrac, tps, specs = [], [], [], [], [], []
     from .profiler import update_time
     for s, prof in zip(plan.stages, profs):
         lps = s.layers_per_stage
@@ -66,6 +70,7 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
             t_fwd.append(f)
             t_bwd.append(bwd)
             t_upd.append(update_time(s.group.spec, cfg, s.tp, plan.dp, lps))
+            wfrac.append(prof.wgrad_frac)
             tps.append(s.tp)
             specs.append(s.group.spec)
     act_bytes = seq_len * cfg.d_model * 2       # one microbatch boundary act
@@ -81,16 +86,19 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
                             intra_bw=specs[i + 1].intra_node_bw,
                             strategy="sr_ag")
         t_p2p.append(base + max(extra, 0.0))
-    return t_fwd, t_bwd, plan.microbatches, t_p2p, t_upd
+    return t_fwd, t_bwd, plan.microbatches, t_p2p, t_upd, wfrac
 
 
 def simulate_plan(plan, cfg, seq_len: int, *,
                   schedule: Optional[ScheduleLike] = None,
                   transport="device_rdma", resharding="sr_ag",
-                  overlap: bool = True, wgrad_frac: float = 0.5) -> SimResult:
-    """Replay a HeteroAuto plan through its (or the given) schedule."""
+                  overlap: bool = True,
+                  wgrad_frac: Optional[float] = None) -> SimResult:
+    """Replay a HeteroAuto plan through its (or the given) schedule.
+    ``wgrad_frac=None`` (default) uses the profiler's analytic per-stage
+    dgrad/wgrad split; pass a float to override globally."""
     sched = get_schedule(schedule if schedule is not None else plan.schedule)
-    tf, tb, b, tp2p, tu = plan_to_schedule_inputs(
+    tf, tb, b, tp2p, tu, wf = plan_to_schedule_inputs(
         plan, cfg, seq_len, transport=transport, resharding=resharding)
     return simulate(sched, tf, tb, b, tp2p, overlap=overlap, t_update=tu,
-                    wgrad_frac=wgrad_frac)
+                    wgrad_frac=wf if wgrad_frac is None else wgrad_frac)

@@ -1,21 +1,33 @@
-"""Pipeline-schedule abstraction (DESIGN.md §3).
+"""Pipeline-schedule abstraction (DESIGN.md §3, §7).
 
-A :class:`Schedule` is defined by ONE thing: the per-stage list of typed
+A :class:`Schedule` is defined by TWO things: the per-stage list of typed
 ops it executes — forward (``F``), combined backward (``B``), or the
-backward split into dgrad (``D``) and wgrad (``W``).  Everything else the
-system needs is *derived* from that op structure:
+backward split into dgrad (``D``) and wgrad (``W``) — and, for chunked
+(virtual-stage) schedules, the *placement* of model chunks on physical
+stages (:meth:`Schedule.global_stage` / :meth:`Schedule.device_of`).
+Everything else the system needs is *derived* from that structure:
 
 * the event-driven simulator (``simulator.py``) replays the op lists with
   per-stage heterogeneous times → makespan / bubble (Table 9 ablations);
 * the cost model's bubble coefficient α (paper §4.3.2) — each schedule
   ships a closed form, and :meth:`Schedule.derived_alpha` re-derives it
   from the op lists with canonical unit times so the closed forms are
-  regression-tested against the abstraction rather than trusted;
+  regression-tested against the abstraction rather than trusted.
+  Shipped α closed forms: gpipe 1, 1f1b 1, zb_h1 (f+d)/(f+d+w) = 2/3,
+  interleaved 1/v, zb_v f/(v·(f+d+w)) = 1/6 (the irreducible fill ramp;
+  the paper's "ZB-V ⇒ α = 0" idealization drops the ramp entirely,
+  which is exact only in the repeated-iteration regime);
 * the in-flight-microbatch memory profile (paper Observation #4,
   generalized beyond 1F1B) consumed by the memory-feasibility check —
   :meth:`Schedule.derived_inflight` walks each stage's op list counting
   stashed forward activations (freed at ``B``, or at ``W`` for
   backward-split schedules, since wgrad still needs the layer input).
+  Shipped closed forms: gpipe b, 1f1b/zb_h1 min(b, S−k), interleaved
+  min(2(S−k−1) + (v−1)S + 1, v·b)/v, zb_v min(b, S) flat;
+* the SPMD runtime's tick→(microbatch, chunk) tables
+  (``repro.core.heteropp.spmd_tick_tables``) — the op lists' per-stage
+  forward order plus the placement determine which neighbor each device
+  reads from at every tick (DESIGN.md §7).
 
 Concrete schedules live in ``library.py`` and self-register; look them up
 with :func:`get_schedule`.
@@ -61,9 +73,34 @@ class Schedule:
     def ops(self, num_stages: int, microbatches: int) -> List[List[Op]]:
         raise NotImplementedError
 
+    def ops_timed(self, num_stages: int, microbatches: int,
+                  fdur: Sequence[float], ddur: Sequence[float],
+                  wdur: Sequence[float]) -> List[List[Op]]:
+        """Op lists specialized to per-stage per-chunk durations.  Most
+        schedules have one canonical order and ignore the times; ZB-V
+        re-runs its greedy construction at the profiled durations (the ZB
+        papers schedule at measured times), which the simulator uses so
+        the replay reflects what the heuristic would actually emit."""
+        return self.ops(num_stages, microbatches)
+
     def supports(self, num_stages: int, microbatches: int) -> bool:
         """Whether this schedule is well-formed for (S, b)."""
         return num_stages >= 1 and microbatches >= 1
+
+    # ----------------------------------------------------------- placement
+    def global_stage(self, stage: int, chunk: int, num_stages: int) -> int:
+        """Global chunk-stage index g hosted by (physical stage, local
+        chunk slot).  Model layers are assigned to global stages in
+        ascending-g order, so this mapping IS the chunk placement.
+        Default: chunk-major (Megatron interleaved), g = chunk·S + stage.
+        ZB-V overrides with the V shape.  Required invariant: for a fixed
+        stage, g must be strictly increasing in the chunk slot."""
+        return chunk * num_stages + stage
+
+    def device_of(self, g: int, num_stages: int) -> int:
+        """Physical stage hosting global chunk-stage ``g`` (the inverse
+        of :meth:`global_stage`)."""
+        return g % num_stages
 
     # ---------------------------------------------------------------- alpha
     def alpha(self, num_stages: Optional[int] = None,

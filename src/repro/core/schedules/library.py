@@ -1,12 +1,25 @@
-"""Concrete pipeline schedules (DESIGN.md §3–§4).
+"""Concrete pipeline schedules (DESIGN.md §3–§4, §7).
 
-Closed forms shipped here are regression-tested against the op-list
-derivation (``Schedule.derived_alpha`` / ``derived_inflight``) in
-``tests/test_schedules.py``.
+| name          | α closed form        | inflight(k) closed form            |
+|---------------|----------------------|------------------------------------|
+| ``gpipe``     | 1                    | b                                  |
+| ``1f1b``      | 1                    | min(b, S−k)                        |
+| ``zb_h1``     | (f+d)/(f+d+w) = 2/3  | min(b, S−k)                        |
+| ``interleaved``| 1/v                 | min(2(S−k−1) + (v−1)S + 1, v·b)/v  |
+| ``zb_v``      | f/(v(f+d+w)) = 1/6   | min(b, S) (flat)                   |
+
+(f, d, w are the canonical unit times, full backward = dgrad + wgrad =
+2·forward; inflight is in full-stage activation sets, so chunked
+schedules count 1/v per stashed chunk.)  Every closed form shipped here
+is regression-tested against the op-list derivation
+(``Schedule.derived_alpha`` / ``derived_inflight``) in
+``tests/test_schedules.py`` — the op lists are the source of truth, the
+closed forms keep ``cost_model.evaluate`` / ``heteroauto.search`` O(1)
+per candidate plan.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Tuple
 
 from .base import Op, Schedule, register
 
@@ -154,8 +167,181 @@ class Interleaved1F1B(Schedule):
     def alpha(self, num_stages=None, microbatches=None) -> float:
         return 1.0 / self.n_chunks
 
+    def inflight(self, S: int, b: int, stage: int) -> float:
+        """Closed form (O(1), keeps schedule search from deriving op lists
+        per (S, b)): the warmup forwards are the peak — after warmup the
+        steady state alternates B/F, so the stash never grows again.
+        Warmup at stage k is min(2(S−k−1) + (v−1)S + 1, v·b) chunk ops,
+        each stashing 1/v of a full-stage activation set."""
+        v = self.n_chunks
+        return min(2 * (S - stage - 1) + (v - 1) * S + 1, v * b) / v
+
+
+class ZBV(Schedule):
+    """ZB-V (Qi et al., "Pipeline Parallelism with Controllable Memory"):
+    two chunks per device placed in a V — device s hosts global stages
+    ``s`` (down the left leg) and ``2S−1−s`` (back up the right leg) — so
+    the turn of the V (g = S−1 → S) is a *local* hop and the drain chain
+    re-enters each device immediately.  Backward is split into dgrad /
+    wgrad like ZB-H1; wgrad is the bubble filler.
+
+    Op lists are generated by a deterministic greedy list scheduler:
+    priority dgrad > forward > wgrad (the dgrad chain is the critical
+    path, wgrad fills what would otherwise be bubble), with forward
+    injection throttled so no device ever stashes more than min(b, S)
+    full-stage activation sets — the 1F1B-peak-memory property the paper
+    claims for ZB-V.  ``ops`` builds the canonical order (unit times);
+    ``ops_timed`` re-runs the same greedy at profiled per-stage durations
+    — the ZB papers schedule at measured times, and a canonical-ratio
+    order replays poorly when dgrad ≠ wgrad — which is what the
+    simulator uses.  Per-device forward order is in both cases the tight
+    stream sorted by injection tick 2m + g, exactly the order the SPMD
+    runtime's tick-synchronous scan requires (DESIGN §7).
+
+    α = f/(v·(f+d+w)) = 1/6 at canonical units: the only residual bubble
+    is the forward fill ramp (S−1 chunk-forward hops), which a single-
+    iteration replay cannot remove; the paper's "ZB-V ⇒ α = 0" drops the
+    ramp (exact in the repeated-iteration regime where iteration k+1's
+    warmup fills iteration k's cooldown).  inflight(k) = min(b, S), flat:
+    every device stashes the same peak — equal to 1F1B's *worst* stage,
+    but not decreasing toward the tail like 1F1B's min(b, S−k).
+
+    Requires b ≥ S: with fewer microbatches the drain starves the filler
+    and the derived α degrades above the closed form.
+    """
+
+    name = "zb_v"
+    n_chunks = 2
+    splits_backward = True
+
+    def __init__(self):
+        super().__init__()
+        self._ops_cache: Dict[Tuple[int, int], List[List[Op]]] = {}
+
+    def supports(self, S: int, b: int) -> bool:
+        return S >= 2 and b >= S
+
+    def global_stage(self, stage: int, chunk: int, num_stages: int) -> int:
+        return stage if chunk == 0 else 2 * num_stages - 1 - stage
+
+    def device_of(self, g: int, num_stages: int) -> int:
+        return g if g < num_stages else 2 * num_stages - 1 - g
+
+    def ops(self, S: int, b: int) -> List[List[Op]]:
+        return self.ops_timed(S, b, [1.0] * S, [1.0] * S, [1.0] * S)
+
+    def ops_timed(self, S: int, b: int, fdur, ddur, wdur) -> List[List[Op]]:
+        assert self.supports(S, b), (S, b, self.name)
+        key = (S, b, tuple(fdur), tuple(ddur), tuple(wdur))
+        seq = self._ops_cache.get(key)
+        if seq is None:
+            seq = self._construct(S, b, list(fdur), list(ddur), list(wdur))
+            if len(self._ops_cache) > 64:
+                self._ops_cache.clear()
+            self._ops_cache[key] = seq
+        return seq
+
+    def _construct(self, S: int, b: int, fdur, ddur, wdur
+                   ) -> List[List[Op]]:
+        """Continuous-time greedy list scheduler: repeatedly run, on the
+        device whose best candidate starts earliest, the highest-priority
+        op ready at that moment (D > F > W on ties).  Dgrad candidates
+        are maintained incrementally — an op enters its device's unlocked
+        list when its own F and the downstream D are scheduled (their
+        finish times then known) — so each of the 3·v·b·S iterations
+        scans only the O(drain-wave) unlocked set, not every pending op."""
+        import heapq
+        v, G = self.n_chunks, self.n_chunks * S
+        gmap = [[self.global_stage(s, k, S) for k in range(v)]
+                for s in range(S)]
+        slot = {gmap[s][k]: k for s in range(S) for k in range(v)}
+        # per-device forward order: the tight stream sorted by the
+        # injection tick 2m + g (chunk0 ticks ≡ s, chunk1 ticks ≡ s+1
+        # mod 2, so a device's two streams never collide)
+        f_stream = []
+        for s in range(S):
+            keyed = sorted((2 * m + gmap[s][k], m, k)
+                           for k in range(v) for m in range(b))
+            f_stream.append([(m, k) for _, m, k in keyed])
+        cap = v * min(b, S)                  # stash cap, in chunk units
+        f_done: Dict[Tuple[int, int], float] = {}  # (m, g) -> finish time
+        d_done: Dict[Tuple[int, int], float] = {}
+        seq: List[List[Op]] = [[] for _ in range(S)]
+        free = [0.0] * S
+        held = [0] * S
+        f_idx = [0] * S
+        # unlocked_d[s]: (dep-ready time, (m, -g), k) — deps scheduled
+        unlocked_d: List[List[Tuple[float, Tuple[int, int], int]]] = \
+            [[] for _ in range(S)]
+        pend_w: List[List[Tuple[int, int, int]]] = [[] for _ in range(S)]
+
+        def unlock_d(m: int, g: int) -> None:
+            core = f_done[(m, g)] if g == G - 1 else \
+                max(f_done[(m, g)], d_done[(m, g + 1)])
+            s = self.device_of(g, S)
+            unlocked_d[s].append((core, (m, -g), slot[g]))
+
+        for _ in range(3 * v * b * S):
+            best = None
+            for s in range(S):
+                cands = []
+                # 1) dgrad: the critical chain (lowest mb, highest g)
+                if unlocked_d[s]:
+                    core, key, k = min(
+                        unlocked_d[s],
+                        key=lambda x: (max(free[s], x[0]), x[1]))
+                    cands.append((max(free[s], core), 0,
+                                  ("D", key[0], -key[1], k)))
+                # 2) forward, in tight-stream order, memory-throttled
+                if f_idx[s] < len(f_stream[s]) and held[s] + 1 <= cap:
+                    m, k = f_stream[s][f_idx[s]]
+                    g = gmap[s][k]
+                    dep = f_done.get((m, g - 1)) if g else 0.0
+                    if dep is not None:
+                        cands.append((max(free[s], dep), 1, ("F", m, g, k)))
+                # 3) wgrad fills the bubble
+                if pend_w[s]:
+                    m, g, k = pend_w[s][0]
+                    cands.append((free[s], 2, ("W", m, g, k)))
+                if not cands:
+                    continue
+                t, pr, op = min(cands)
+                if best is None or (t, pr, s) < best[:3]:
+                    best = (t, pr, s, op)
+            assert best is not None, ("zb_v construction stalled", S, b)
+            t, _, s, (kind, m, g, k) = best
+            if kind == "D":
+                unlocked_d[s] = [x for x in unlocked_d[s]
+                                 if x[1] != (m, -g)]
+                d_done[(m, g)] = t + ddur[s]
+                free[s] = t + ddur[s]
+                heapq.heappush(pend_w[s], (m, g, k))
+                if g > 0 and (m, g - 1) in f_done:
+                    unlock_d(m, g - 1)
+            elif kind == "F":
+                f_idx[s] += 1
+                f_done[(m, g)] = t + fdur[s]
+                free[s] = t + fdur[s]
+                held[s] += 1
+                if g == G - 1 or (m, g + 1) in d_done:
+                    unlock_d(m, g)
+            else:
+                heapq.heappop(pend_w[s])
+                free[s] = t + wdur[s]
+                held[s] -= 1
+            seq[s].append(Op(kind, m, k))
+        return seq
+
+    def alpha(self, num_stages=None, microbatches=None) -> float:
+        f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+        return f / (self.n_chunks * (f + d + w))
+
+    def inflight(self, S: int, b: int, stage: int) -> float:
+        return float(min(b, S))
+
 
 register(GPipe())
 register(OneFOneB())
 register(ZBH1())
 register(Interleaved1F1B(2))
+register(ZBV())

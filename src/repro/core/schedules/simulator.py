@@ -9,15 +9,24 @@ one device); an op waits for its cross-stage dependencies:
   B/D(m, g) ← own F(m, g) and D-or-B(m, g+1) done (+ transfer)
   W(m, g)   ← own D(m, g) done (in-order execution already guarantees it)
 
+The (stage, chunk) → g mapping comes from the schedule's placement
+(:meth:`Schedule.global_stage`): chunk-major for Megatron interleaving,
+V-shaped for ZB-V — where the g = S−1 → S hop lands on the SAME device
+and is therefore transfer-free, the property that lets ZB-V drain at
+dgrad speed without paying the wrap-around hop.
+
 ``overlap=False`` models un-overlapped P2P (paper §5): the transfer also
 occupies the *sender* stage.  For chunked (interleaved) schedules each op
-carries 1/v of the stage's layer time, and the wrap-around hop from stage
-S−1 back to stage 0 is charged the worst boundary cost.
+carries 1/v of the stage's layer time, and a non-adjacent hop (the
+chunk-major wrap from stage S−1 back to stage 0) is charged the worst
+boundary cost.  ``wgrad_frac`` may be per-stage (see
+``repro.core.schedule.plan_to_schedule_inputs``, which derives it from
+each stage's analytic op mix) or one global float.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 from .base import ScheduleLike, get_schedule
 
@@ -33,31 +42,39 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
              t_bwd: Sequence[float], microbatches: int,
              t_p2p: Sequence[float], *, overlap: bool = True,
              t_update: Optional[Sequence[float]] = None,
-             wgrad_frac: float = 0.5) -> SimResult:
+             wgrad_frac: Union[float, Sequence[float]] = 0.5) -> SimResult:
     """t_fwd/t_bwd: per-stage per-microbatch compute times (len S; t_bwd is
     the FULL backward — for backward-split schedules it is divided into
-    dgrad = (1−wgrad_frac)·t_bwd and wgrad = wgrad_frac·t_bwd).
+    dgrad = (1−wgrad_frac)·t_bwd and wgrad = wgrad_frac·t_bwd;
+    ``wgrad_frac`` is one float or a per-stage sequence of len S).
     t_p2p[i]: activation transfer across boundary i → i+1 (len S−1); the
     same cost is charged to gradient transfers on the way back."""
     sched = get_schedule(schedule)
     S, b, v = len(t_fwd), microbatches, sched.n_chunks
     assert sched.supports(S, b), (sched.name, S, b)
     G = S * v
-    ops = sched.ops(S, b)
     t_update = list(t_update) if t_update is not None else [0.0] * S
     t_p2p = list(t_p2p)
+    wf = list(wgrad_frac) if isinstance(wgrad_frac, (list, tuple)) \
+        else [float(wgrad_frac)] * S
+    assert len(wf) == S, (len(wf), S)
 
     fdur = [t / v for t in t_fwd]
     bdur = [t / v for t in t_bwd]
-    ddur = [t * (1.0 - wgrad_frac) / v for t in t_bwd]
-    wdur = [t * wgrad_frac / v for t in t_bwd]
+    ddur = [t * (1.0 - f) / v for t, f in zip(t_bwd, wf)]
+    wdur = [t * f / v for t, f in zip(t_bwd, wf)]
+    # schedules that plan at profiled times (zb_v) specialize their op
+    # lists to the actual durations; the rest return the canonical order
+    ops = sched.ops_timed(S, b, fdur, ddur, wdur)
 
     def xfer(a: int, c: int) -> float:
         if a == c:
-            return 0.0
+            return 0.0                        # same device (e.g. ZB-V turn)
         if abs(a - c) == 1:
             return t_p2p[min(a, c)]
         return max(t_p2p) if t_p2p else 0.0   # interleaved wrap-around hop
+
+    dev = sched.device_of                     # global chunk-stage -> device
 
     fwd_done = [[None] * b for _ in range(G)]
     dgrad_done = [[None] * b for _ in range(G)]   # B sets this too
@@ -70,14 +87,14 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
         for s in range(S):
             while idx[s] < len(ops[s]):
                 op = ops[s][idx[s]]
-                g = op.chunk * S + s
+                g = sched.global_stage(s, op.chunk, S)
                 if op.kind == "F":
                     dep = 0.0 if g == 0 else fwd_done[g - 1][op.mb]
                     if dep is None:
                         break
-                    ready = dep + (xfer((g - 1) % S, s) if g > 0 else 0.0)
+                    ready = dep + (xfer(dev(g - 1, S), s) if g > 0 else 0.0)
                     dur = fdur[s] + (0.0 if overlap or g == G - 1
-                                     else xfer(s, (g + 1) % S))
+                                     else xfer(s, dev(g + 1, S)))
                     start = max(free[s], ready)
                     fwd_done[g][op.mb] = start + dur
                 elif op.kind in ("B", "D"):
@@ -86,10 +103,10 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
                     if dep_self is None or dep_next is None:
                         break
                     ready = max(dep_self,
-                                dep_next + (xfer((g + 1) % S, s)
+                                dep_next + (xfer(dev(g + 1, S), s)
                                             if g < G - 1 else 0.0))
                     dur = (bdur[s] if op.kind == "B" else ddur[s]) + \
-                        (0.0 if overlap or g == 0 else xfer(s, (g - 1) % S))
+                        (0.0 if overlap or g == 0 else xfer(s, dev(g - 1, S)))
                     start = max(free[s], ready)
                     dgrad_done[g][op.mb] = start + dur
                 else:                                   # W

@@ -3,14 +3,22 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen1p5_0p5b \
         --steps 100 --batch 8 --seq 256 [--model-parallel 1] [--accum 1] \
         [--pipeline-parallel 4 --schedule 1f1b --microbatches 4] \
+        [--plan plan.json | --search A:2,B:2] \
         [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
 
 Uses whatever devices exist (CPU/TPU); on a real TPU fleet the same flags
 drive the production mesh.  ``--smoke`` selects the reduced config family.
 ``--pipeline-parallel N`` switches to the shard_map HeteroPP pipeline over
 N devices; ``--schedule`` picks the pipeline schedule (see
-``repro.core.schedules``) and is validated against the SPMD scan
-constraint.
+``repro.core.schedules``) — chunked schedules (``interleaved``, ``zb_v``)
+run with v chunk slots per device via the schedule-derived tick tables.
+``--plan plan.json`` executes a saved HeteroAuto ``ParallelPlan`` (see
+``examples/hetero_search.py --save-plan``) through ``heteropp.from_plan``
+— schedule AND non-uniform layer split included; ``--search A:2,B:2``
+runs the HeteroAuto search on the given chip cluster first and executes
+the winner the same way (the plan's total pipeline depth must fit the
+available devices; tp/dp are cost-model dimensions the local pipe mesh
+does not realize).
 """
 from __future__ import annotations
 
@@ -32,29 +40,80 @@ from ..training.train_step import (abstract_train_state, make_train_state,
 from .mesh import make_local_mesh
 
 
+def _pipeline_spec(args, cfg):
+    """Resolve the PipelineSpec: from a saved plan (--plan), a fresh
+    HeteroAuto search (--search), or the uniform CLI split."""
+    from ..core import heteropp as HP
+
+    mb = args.microbatches
+    if args.plan and args.search:
+        raise SystemExit("--plan and --search are mutually exclusive")
+    if args.plan or args.search:
+        # the plan carries schedule and stage count; conflicting explicit
+        # flags would be silently ignored — refuse instead
+        src = "--plan" if args.plan else "--search"
+        if args.schedule is not None:
+            raise SystemExit(f"{src} uses the plan's schedule; drop "
+                             f"--schedule {args.schedule}")
+        if args.pipeline_parallel > 1:
+            raise SystemExit(f"{src} sets the stage count from the plan; "
+                             f"drop --pipeline-parallel")
+    if args.plan:
+        import json
+        from ..core.cost_model import ParallelPlan
+        with open(args.plan) as f:
+            plan = ParallelPlan.from_dict(json.load(f))
+        print(f"plan [{args.plan}]: {plan.describe()}")
+        return HP.from_plan(plan, microbatches=mb or None)
+    if args.search:
+        from ..core import chips, heteroauto
+        groups = []
+        for part in args.search.split(","):
+            name, count = part.split(":")
+            groups.append(chips.ChipGroup(chips.CHIPS[name], int(count)))
+        r = heteroauto.search(groups, cfg, args.batch * args.seq, args.seq,
+                              two_stage=False, dp_candidates=[1])
+        if r.plan is None:
+            raise SystemExit(f"--search {args.search}: no feasible plan for "
+                             f"{cfg.name}")
+        print(f"searched plan ({r.evaluated} configs, {r.search_time_s:.2f}s): "
+              f"{r.plan.describe()}")
+        return HP.from_plan(r.plan, microbatches=mb or None)
+    from ..core.schedules import get_schedule
+    pp = args.pipeline_parallel
+    sched = get_schedule(args.schedule or "1f1b")
+    base, rem = divmod(cfg.num_layers, pp)
+    phys = [base + (1 if i < rem else 0) for i in range(pp)]
+    return HP.PipelineSpec(pp, HP.chunk_layer_counts(phys, sched),
+                           microbatches=mb or pp, schedule=sched.name,
+                           n_chunks=sched.n_chunks)
+
+
 def run_pipeline(args, cfg):
-    """shard_map pipeline training: one stage per pipe-axis member."""
+    """shard_map pipeline training: one physical stage (v chunk slots of
+    layers for chunked schedules) per pipe-axis member."""
     from jax.sharding import Mesh
     from ..core import heteropp as HP
     from ..optim import adamw
 
-    pp = args.pipeline_parallel
     devices = jax.devices()
+    spec = _pipeline_spec(args, cfg)
+    pp = spec.num_stages
     if len(devices) < pp:
-        raise SystemExit(f"--pipeline-parallel {pp} needs ≥{pp} devices "
-                         f"(have {len(devices)})")
+        raise SystemExit(f"pipeline needs ≥{pp} devices (have "
+                         f"{len(devices)})")
     mesh = Mesh(np.array(devices[:pp]), ("pipe",))
 
-    L = cfg.num_layers
-    base, rem = divmod(L, pp)
-    lps = tuple(base + (1 if i < rem else 0) for i in range(pp))
-    mb = args.microbatches or pp
+    mb = spec.microbatches
     if args.batch % mb:
         raise SystemExit(f"--batch {args.batch} not divisible by "
-                         f"--microbatches {mb}")
-    spec = HP.PipelineSpec(pp, lps, microbatches=mb, schedule=args.schedule)
-    print(f"pipeline: stages={pp} layers/stage={lps} microbatches={mb} "
-          f"schedule={args.schedule}")
+                         f"microbatches {mb}")
+    if spec.total_layers != cfg.num_layers:
+        raise SystemExit(f"plan covers {spec.total_layers} layers but "
+                         f"{cfg.name} has {cfg.num_layers}")
+    print(f"pipeline: stages={pp} v={spec.n_chunks} "
+          f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
+          f"schedule={spec.schedule}")
 
     from ..models import model as M
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -94,11 +153,20 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--pipeline-parallel", type=int, default=1,
                     help="run the shard_map pipeline over N stages")
-    ap.add_argument("--schedule", default="1f1b",
+    ap.add_argument("--schedule", default=None,
                     choices=available_schedules(),
-                    help="pipeline schedule (with --pipeline-parallel)")
+                    help="pipeline schedule (with --pipeline-parallel; "
+                         "default 1f1b; saved/searched plans carry their "
+                         "own)")
     ap.add_argument("--microbatches", type=int, default=0,
                     help="pipeline microbatches (default: = stages)")
+    ap.add_argument("--plan", default=None,
+                    help="run a saved HeteroAuto plan JSON through "
+                         "heteropp.from_plan (schedule + non-uniform "
+                         "layer split; see hetero_search.py --save-plan)")
+    ap.add_argument("--search", default=None, metavar="CHIP:N,...",
+                    help="HeteroAuto-search the given chip cluster and "
+                         "run the winning plan (e.g. A:2,B:2)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--seed", type=int, default=0)
@@ -112,7 +180,7 @@ def main():
     print(f"arch={cfg.name} family={cfg.family} "
           f"params~{cfg.param_count() / 1e6:.1f}M devices={len(jax.devices())}")
 
-    if args.pipeline_parallel > 1:
+    if args.pipeline_parallel > 1 or args.plan or args.search:
         run_pipeline(args, cfg)
         return
 

@@ -1,5 +1,11 @@
 """Subprocess helper: SPMD HeteroPP pipeline on 4 virtual devices.
 
+Covers the schedule/runtime contract (DESIGN.md §7): single-chunk
+schedules (1f1b/gpipe/zb_h1), chunked v=2 schedules (interleaved, zb_v)
+via the tick tables + chunked parameter layout, and the searched-plan
+path (ParallelPlan -> from_plan -> SPMD) — all bit-identical to each
+other and matching the monolithic model / simulate_pipeline_forward.
+
 Run as a script (spawned by tests/test_heteropp.py) so the forced device
 count never leaks into the main pytest process.
 """
@@ -32,7 +38,8 @@ def main():
 
     mesh = jax.make_mesh((4,), ("pipe",))
     # 4 stages over 2 layers won't sum; use padded non-uniform split of 2
-    spec = HP.PipelineSpec(4, (1, 0, 0, 1), microbatches=b)
+    phys = (1, 0, 0, 1)
+    spec = HP.PipelineSpec(4, phys, microbatches=b)
 
     stage_params, mask = HP.split_stage_params(params, cfg, spec)
     losses = {}
@@ -47,12 +54,20 @@ def main():
     # identical program, bit-identical loss
     assert losses["gpipe"] == loss == losses["zb_h1"], losses
 
-    # interleaved needs a chunked parameter layout -> must be rejected
-    try:
-        HP.make_spmd_pipeline_loss(cfg, spec, mesh, schedule="interleaved")
-        raise AssertionError("interleaved accepted by SPMD runtime")
-    except NotImplementedError:
-        pass
+    # chunked (virtual-stage) schedules: v=2 chunk slots per device, same
+    # per-layer math in the same order -> still bit-identical
+    for schedule in ("interleaved", "zb_v"):
+        cspec = HP.PipelineSpec(
+            4, HP.chunk_layer_counts(phys, schedule), microbatches=b,
+            schedule=schedule, n_chunks=2)
+        csp, cmask = HP.split_stage_params(params, cfg, cspec)
+        loss_fn = HP.make_spmd_pipeline_loss(cfg, cspec, mesh, remat=True)
+        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+                else _null():
+            losses[schedule] = float(loss_fn(csp, cmask, tokens))
+    assert losses["interleaved"] == loss == losses["zb_v"], losses
+    print(f"chunked v=2 losses bit-exact vs single-chunk: "
+          f"{losses['interleaved']:.6f}")
 
     # reference 1: monolithic forward loss over all microbatches
     ref_losses = []
@@ -83,12 +98,50 @@ def main():
     print(f"simulate_pipeline_forward ref={sim_ref:.6f} rel_err={err_sim:.2e}")
     assert err_sim < 2e-3, (loss, sim_ref)
 
-    # gradients flow through ppermute
+    # end-to-end: a ParallelPlan with a chunked schedule and non-uniform
+    # layers through from_plan -> SPMD run vs simulate_pipeline_forward
+    from repro.core import chips
+    from repro.core.cost_model import ParallelPlan, StagePlan
+    plan = ParallelPlan(
+        [StagePlan(chips.ChipGroup(chips.CHIPS["A"], 2), 1, 2, 1, False),
+         StagePlan(chips.ChipGroup(chips.CHIPS["B"], 2), 1, 2, 1, False)],
+        dp=1, microbatches=b, schedule="zb_v")
+    pspec = HP.from_plan(plan)
+    assert pspec.n_chunks == 2 and pspec.num_stages == 4
+    assert pspec.total_layers == cfg.num_layers
+    psp, pmask = HP.split_stage_params(params, cfg, pspec)
+    loss_fn = HP.make_spmd_pipeline_loss(cfg, pspec, mesh, remat=True)
+    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+            else _null():
+        plan_loss = float(loss_fn(psp, pmask, tokens))
+    plan_sim = []
+    for i in range(b):
+        logits, _ = HP.simulate_pipeline_forward(params, cfg, pspec,
+                                                 {"tokens": tokens[i]})
+        toks = tokens[i]
+        targets = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+        lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        plan_sim.append(float(jnp.sum(nll * lmask) / jnp.sum(lmask)))
+    plan_ref = float(np.mean(plan_sim))
+    err_plan = abs(plan_loss - plan_ref) / max(abs(plan_ref), 1e-9)
+    print(f"from_plan v=2 loss={plan_loss:.6f} sim_ref={plan_ref:.6f} "
+          f"rel_err={err_plan:.2e}")
+    assert err_plan < 2e-3, (plan_loss, plan_ref)
+    assert plan_loss == loss, (plan_loss, loss)  # same layers, same math
+
+    # gradients flow through ppermute (single-chunk and chunked paths)
     loss_fn = HP.make_spmd_pipeline_loss(cfg, spec, mesh, remat=True)
     g = jax.grad(lambda sp: loss_fn(sp, mask, tokens))(stage_params)
     gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
     assert np.isfinite(gn) and gn > 0
-    print(f"grad_abs_sum={gn:.3e}")
+    loss_fn = HP.make_spmd_pipeline_loss(cfg, pspec, mesh, remat=True)
+    g = jax.grad(lambda sp: loss_fn(sp, pmask, tokens))(psp)
+    gn2 = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn2) and gn2 > 0
+    print(f"grad_abs_sum={gn:.3e} chunked={gn2:.3e}")
     print("OK")
 
 

@@ -27,13 +27,15 @@ def test_cost_model_agrees_with_event_simulator(exp, sched):
     closed = r.cost.iter_time
     # event-driven replay with zero-cost transfers (the closed form has no
     # P2P term; DiComm latencies are added separately)
-    tf, tb, b, tp2p, tu = SCH.plan_to_schedule_inputs(r.plan, CFG, 4096)
-    sim = SCH.simulate(sched, tf, tb, b, [0.0] * len(tp2p), t_update=tu)
+    tf, tb, b, tp2p, tu, wf = SCH.plan_to_schedule_inputs(r.plan, CFG, 4096)
+    sim = SCH.simulate(sched, tf, tb, b, [0.0] * len(tp2p), t_update=tu,
+                       wgrad_frac=wf)
     rel = abs(sim.makespan - closed) / closed
     assert rel < 0.15, (closed, sim.makespan)
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1", "interleaved"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1", "interleaved",
+                                   "zb_v"])
 def test_alpha_per_schedule_agrees_with_simulator(sched):
     """Uniform synthetic pipeline: the cost model's closed form
     b·T + α·(S−1)·T must match the event-driven replay of the same
@@ -55,11 +57,15 @@ def test_search_annotates_schedule_and_zb_wins_by_default():
                           two_stage=False)
     r1 = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
                            two_stage=False, schedule="1f1b")
+    rh1 = heteroauto.search(groups, CFG, spec["gbs_tokens"], 4096,
+                            two_stage=False, schedule="zb_h1")
     assert r.plan is not None and r1.plan is not None
-    # default candidate set prefers the lower-alpha backward-split schedule
-    assert r.plan.schedule == "zb_h1"
-    assert r.cost.schedule == "zb_h1" and r.cost.alpha < 1.0
-    assert r.cost.iter_time < r1.cost.iter_time
+    # default candidate set prefers the lowest-alpha schedule that fits
+    # memory: ZB-V (alpha = 1/6) when feasible
+    assert r.plan.schedule == "zb_v"
+    assert r.cost.schedule == "zb_v"
+    assert r.cost.alpha == pytest.approx(1 / 6)
+    assert r.cost.iter_time < rh1.cost.iter_time < r1.cost.iter_time
 
 
 def test_zb_beats_1f1b_on_heterogeneous_4stage_fixture():
@@ -73,6 +79,26 @@ def test_zb_beats_1f1b_on_heterogeneous_4stage_fixture():
     f1 = SCH.simulate("1f1b", t_fwd, t_bwd, 8, t_p2p)
     assert zb.makespan < f1.makespan, (zb.makespan, f1.makespan)
     assert zb.bubble_frac < f1.bubble_frac
+
+
+def test_per_stage_wgrad_fractions_from_op_mix():
+    """plan_to_schedule_inputs splits each stage's t_bwd analytically:
+    fractions are per-stage (tp-dependent — collectives ride the dgrad
+    path) and a higher-tp stage never has a LARGER wgrad share."""
+    from repro.core.cost_model import ParallelPlan, StagePlan
+    g = chips.cluster(("A", 64), ("D", 64))
+    st = [StagePlan(g[0], 1, 4, 40, False), StagePlan(g[1], 8, 4, 40, True)]
+    plan = ParallelPlan(st, 2, 16, schedule="zb_h1")
+    tf, tb, b, tp2p, tu, wf = SCH.plan_to_schedule_inputs(plan, CFG, 4096)
+    assert len(wf) == plan.total_pp == len(tb)
+    assert all(0.0 < f < 1.0 for f in wf)
+    # tp=1 stages (pure compute) keep a near-1:1 split; chip D's tp=8
+    # collectives push its backward toward dgrad
+    assert wf[0] > wf[-1]
+    # the analytic split changes the backward-split replay vs a flat 0.5
+    a = SCH.simulate("zb_h1", tf, tb, b, tp2p, wgrad_frac=wf)
+    f = SCH.simulate("zb_h1", tf, tb, b, tp2p, wgrad_frac=0.5)
+    assert a.makespan != f.makespan
 
 
 def test_schedule_memory_profile_drives_feasibility():

@@ -55,6 +55,52 @@ def test_from_plan_expands_stages():
     assert spec.total_layers == cfg.num_layers
     assert spec.num_stages == r.plan.total_pp
     assert spec.microbatches == r.plan.microbatches
+    from repro.core.schedules import get_schedule
+    assert spec.n_chunks == get_schedule(r.plan.schedule).n_chunks
+
+
+def test_from_plan_chunked_layout():
+    """Chunked schedules: layers spread over v chunk slots per device in
+    ascending global-stage order, preserving the searched non-uniform
+    split per physical stage."""
+    cfg = get_config("h2_100b")
+    groups = chips.cluster(("A", 256), ("B", 256))
+    r = heteroauto.search(groups, cfg, 2 * 2 ** 20, 4096, two_stage=False,
+                          schedule="zb_v")
+    assert r.plan is not None and r.plan.schedule == "zb_v"
+    spec = HP.from_plan(r.plan)
+    S, v = spec.num_stages, spec.n_chunks
+    assert v == 2 and len(spec.layers_per_stage) == S * v
+    assert spec.total_layers == cfg.num_layers
+    # per-device totals must match the plan's physical split
+    from repro.core.schedules import get_schedule
+    sched = get_schedule("zb_v")
+    phys = [0] * S
+    for g, l in enumerate(spec.layers_per_stage):
+        phys[sched.device_of(g, S)] += l
+    want, i = [], 0
+    for st in r.plan.stages:
+        left = st.layers
+        for _ in range(st.pp):
+            take = min(st.layers_per_stage, left)
+            want.append(take)
+            left -= take
+    assert phys == want
+    # plan JSON roundtrip preserves the spec
+    import json
+    from repro.core.cost_model import ParallelPlan
+    p2 = ParallelPlan.from_dict(json.loads(json.dumps(r.plan.to_dict())))
+    assert HP.from_plan(p2) == spec
+
+
+def test_schedule_injection_order_diagonal_view():
+    """The compact single-chunk view of spmd_tick_tables: diagonal
+    streams inject microbatches in order; chunked schedules have no
+    single injection order."""
+    for name in ("1f1b", "gpipe", "zb_h1"):
+        assert HP.schedule_injection_order(name, 4, 6) == list(range(6))
+    with pytest.raises(NotImplementedError):
+        HP.schedule_injection_order("interleaved", 4, 8)
 
 
 def test_manual_dp_zero1_subprocess():

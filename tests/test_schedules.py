@@ -7,7 +7,7 @@ from repro.core import schedule as SCH
 from repro.core.schedules import (Interleaved1F1B, available_schedules,
                                   get_schedule, simulate)
 
-ALL = ["gpipe", "1f1b", "zb_h1", "interleaved"]
+ALL = ["gpipe", "1f1b", "zb_h1", "interleaved", "zb_v"]
 GRID = [(2, 2), (2, 8), (3, 6), (4, 8), (4, 16), (6, 12)]
 
 
@@ -83,6 +83,57 @@ def test_known_memory_profiles():
     il = get_schedule("interleaved")
     assert all(il.inflight(4, 16, k) >
                get_schedule("1f1b").inflight(4, 16, k) for k in range(4))
+    # interleaved closed form: warmup/v, capped by the total stream
+    assert [il.inflight(4, 16, k) for k in range(4)] == \
+        [min(2 * (4 - k - 1) + 4 + 1, 32) / 2 for k in range(4)]
+    # ZB-V: flat min(b, S) — every device stashes 1F1B's WORST-stage peak
+    assert [get_schedule("zb_v").inflight(4, 16, k) for k in range(4)] == \
+        [4, 4, 4, 4]
+    assert [get_schedule("zb_v").inflight(4, 2, k) for k in range(4)] == \
+        [2, 2, 2, 2]
+
+
+def test_zbv_v_placement():
+    """V shape: chunk 0 runs down the devices, chunk 1 back up; the turn
+    g = S−1 → S stays on device S−1 and the last global stage lands on
+    device 0."""
+    zv = get_schedule("zb_v")
+    S = 4
+    assert [zv.device_of(g, S) for g in range(2 * S)] == \
+        [0, 1, 2, 3, 3, 2, 1, 0]
+    for s in range(S):
+        assert zv.global_stage(s, 0, S) == s
+        assert zv.global_stage(s, 1, S) == 2 * S - 1 - s
+        for k in range(2):
+            assert zv.device_of(zv.global_stage(s, k, S), S) == s
+    assert zv.supports(4, 4) and zv.supports(2, 8)
+    assert not zv.supports(4, 2) and not zv.supports(1, 8)  # needs b >= S
+
+
+def test_zbv_alpha_is_fill_ramp_only():
+    """ZB-V's α = f/(v(f+d+w)) = 1/6 at canonical units: only the forward
+    fill ramp survives; strictly below zb_h1 (2/3) and interleaved (1/2)."""
+    zv, zh = get_schedule("zb_v"), get_schedule("zb_h1")
+    il = get_schedule("interleaved")
+    assert zv.alpha() == pytest.approx(1 / 6)
+    assert zv.alpha() < il.alpha() < zh.alpha() < 1.0
+    for S, b in GRID:
+        if zv.supports(S, b):
+            assert zv.derived_alpha(S, b) == pytest.approx(1 / 6)
+
+
+def test_zbv_beats_zbh1_on_hetero_fixture():
+    """Generic-simulator acceptance on the heterogeneous 4-stage fixture:
+    the V placement + wgrad filling beat ZB-H1, which beats 1F1B."""
+    t_fwd = [1.0, 1.4, 0.8, 1.2]
+    t_bwd = [2.0, 2.8, 1.6, 2.4]
+    t_p2p = [0.05, 0.05, 0.05]
+    zv = simulate("zb_v", t_fwd, t_bwd, 8, t_p2p)
+    zh = simulate("zb_h1", t_fwd, t_bwd, 8, t_p2p)
+    f1 = simulate("1f1b", t_fwd, t_bwd, 8, t_p2p)
+    assert zv.makespan < zh.makespan < f1.makespan, \
+        (zv.makespan, zh.makespan, f1.makespan)
+    assert zv.bubble_frac < zh.bubble_frac
 
 
 def test_zb_with_zero_wgrad_fraction_degenerates_to_1f1b():
