@@ -1,10 +1,12 @@
 """Paper Table 9 (+ Fig 12) — ablations on the Exp-C-1 configuration:
 relative iteration time of DDR vs TCP transport, HeteroPP vs uniform layer
-split, SR&AG resharding on/off, fine-grained overlap on/off, and pipeline
+split, SR&AG resharding on/off, fine-grained overlap on/off, pipeline
 SCHEDULE (GPipe / 1F1B / interleaved / ZB-H1 / ZB-V, the §5 wgrad-overlap
 ablation; backward-split rows use the profiler's analytic per-stage
-dgrad/wgrad fractions) — replayed through the generic event-driven
-schedule simulator.
+dgrad/wgrad fractions), and a tp ablation (uniform executable tp — the
+shape the 2-D (pipe, tp) runtime can run, DESIGN.md §8 — vs the searched
+per-stage tp) — replayed through the generic event-driven schedule
+simulator.
 
     PYTHONPATH=src python -m benchmarks.bench_ablation [--schedule 1f1b]
 
@@ -86,6 +88,23 @@ def main(argv=None):
     uni = ParallelPlan(uni_stages, dp, plan.microbatches)
     emit("table9.uniform_1f1b", f"{run(the_plan=uni) / full:.1%}",
          f"paper: {PAPER['uniform']}% (tp=4 everywhere, equal layers/stage)")
+
+    # tp ablation: force ONE tp degree across every stage — the only
+    # shape the 2-D (pipe, tp) SPMD runtime can execute (DESIGN.md §8;
+    # non-uniform per-stage tp stays cost-model-only) — vs the searched
+    # per-stage tp.  Keeping pp and the layer split fixed changes the
+    # chip budget, so these are WHAT-IF rows (the chip counts are in the
+    # detail column), not feasible same-cluster alternatives.
+    tps = sorted({s.tp for s in plan.stages})
+    for tp_f in sorted({1, max(tps)}):
+        forced = ParallelPlan(
+            [dataclasses.replace(s, tp=tp_f) for s in plan.stages],
+            plan.dp, plan.microbatches, plan.schedule)
+        emit(f"table9.tp_whatif{tp_f}",
+             f"{run(the_plan=forced) / full:.1%}",
+             f"what-if uniform tp={tp_f} vs searched per-stage tp={tps}, "
+             f"same pp/layer split — uses {forced.total_chips} chips vs "
+             f"the plan's {plan.total_chips}")
 
     # Fig 12: small-scale e2e DDR vs TCP (8-layer model, TP4 PP2 DP2)
     small = dataclasses.replace(cfg, num_layers=8)

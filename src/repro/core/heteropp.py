@@ -7,12 +7,18 @@ schedule/runtime contract):
   bit-identical to the monolithic model: the numerics oracle for tests and
   the tick-level schedule studies.
 
-* ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe``/``pod`` axis
-  with GSPMD left automatic over ``data``/``model``: every device runs the
+* ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe`` axis (and,
+  when ``PipelineSpec.tensor_parallel > 1``, a second manual ``tp`` axis:
+  a 2-D ``(pipe, tp)`` mesh — DESIGN.md §8): every device runs the
   same program; per-stage *data* (padded stacked layer weights) differs.
-  Each pipe member holds ONE physical stage — ``n_chunks`` (v) chunk
+  Each pipe ROW holds ONE physical stage — ``n_chunks`` (v) chunk
   slots of layers for virtual-stage schedules, stacked ``(S, v, Lcmax,
   ...)``; single-chunk specs keep the flat ``(S, Lmax, ...)`` layout.
+  Within a pipe row the tp axis shards each layer Megatron-style
+  (``sharding/rules.py``: QKV/MLP-up column-parallel, the two ``wo``
+  row-parallel) and ``_stage_forward`` closes each sub-block with a
+  ``psum`` over tp, so activations re-enter the pipe stream replicated
+  and the tick-synchronous ppermute keeps moving along pipe rows only.
   Microbatches stream through a tick-synchronous scan whose static
   tick→(microbatch, chunk, route) program is derived from the plan's
   ``repro.core.schedules`` Schedule by :func:`spmd_tick_tables`:
@@ -42,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models import layers, model as M, transformer as tfm
+from ..models import attention, layers, model as M, transformer as tfm
 from ..models.config import ModelConfig
 from ..optim import adamw
 
@@ -59,7 +65,9 @@ class PipelineSpec:
     The schedule's chunk placement decides which physical stage hosts
     which global chunk-stage (``Schedule.global_stage`` — chunk-major for
     interleaved, V-shaped for zb_v).  ``recompute`` stays per PHYSICAL
-    stage."""
+    stage.  ``tensor_parallel`` is the UNIFORM tp degree realized inside
+    each pipe row on the 2-D ``(pipe, tp)`` mesh (DESIGN.md §8); 1 keeps
+    the 1-D pipe mesh."""
     num_stages: int
     layers_per_stage: Tuple[int, ...]     # per global chunk-stage
     microbatches: int
@@ -67,9 +75,12 @@ class PipelineSpec:
     pipe_axis: str = "pipe"
     schedule: str = "1f1b"                # repro.core.schedules name
     n_chunks: int = 1                     # virtual stages per device (v)
+    tensor_parallel: int = 1              # uniform tp inside each pipe row
+    tp_axis: str = "tp"
 
     def __post_init__(self):
         assert len(self.layers_per_stage) == self.num_stages * self.n_chunks
+        assert self.tensor_parallel >= 1, self.tensor_parallel
         if not self.recompute:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
@@ -84,17 +95,38 @@ class PipelineSpec:
         return max(self.layers_per_stage)
 
 
-def from_plan(plan, microbatches: Optional[int] = None) -> PipelineSpec:
+def from_plan(plan, microbatches: Optional[int] = None, *,
+              execute_tp: bool = False) -> PipelineSpec:
     """Build a runtime PipelineSpec from a HeteroAuto ParallelPlan.
 
     For chunked schedules (``interleaved``, ``zb_v``) each physical
     stage's layer allotment is split across its v chunk slots (earlier
     slots take the remainder) and laid out in ascending global-stage
     order, so the model's layer order follows the schedule's chunk
-    placement and the searched non-uniform split survives intact."""
+    placement and the searched non-uniform split survives intact.
+
+    ``execute_tp=True`` consumes the plan's per-stage tp degree and
+    realizes it on the runtime's 2-D ``(pipe, tp)`` mesh.  Only UNIFORM
+    tp is executable — the SPMD runtime runs one program on one mesh
+    shape, so a plan whose stages disagree on tp is refused with a clear
+    error and stays a cost-model artifact (DESIGN.md §8).  The default
+    keeps the historical behaviour: tp remains a cost-model dimension and
+    the runtime executes the layer split alone."""
     from .schedules import get_schedule
     sched = get_schedule(plan.schedule)
     v = sched.n_chunks
+    tp = 1
+    if execute_tp:
+        tps = sorted({s.tp for s in plan.stages})
+        if len(tps) > 1:
+            raise ValueError(
+                f"plan assigns non-uniform per-stage tp {tps} "
+                f"({plan.describe()}); the SPMD runtime executes ONE "
+                f"(pipe, tp) mesh program, so asymmetric intra-stage "
+                f"parallelism stays a cost-model dimension (DESIGN.md §8) "
+                f"— re-search with uniform tp or call from_plan with "
+                f"execute_tp=False")
+        tp = tps[0]
     phys, rec = [], []
     for s in plan.stages:
         per = s.layers_per_stage
@@ -106,7 +138,8 @@ def from_plan(plan, microbatches: Optional[int] = None) -> PipelineSpec:
             left -= take
     return PipelineSpec(len(phys), chunk_layer_counts(phys, sched),
                         microbatches or plan.microbatches,
-                        tuple(rec), schedule=plan.schedule, n_chunks=v)
+                        tuple(rec), schedule=plan.schedule, n_chunks=v,
+                        tensor_parallel=tp)
 
 
 def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
@@ -201,12 +234,73 @@ def abstract_stage_params(cfg: ModelConfig, spec: PipelineSpec) -> PyTree:
 # stage compute
 # ---------------------------------------------------------------------------
 
-def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool):
-    """Run Lmax (padded) layers; masked layers are identity."""
+def validate_tensor_parallel(cfg: ModelConfig, tp: int) -> None:
+    """Check that the runtime can realize tp-degree ``tp`` for ``cfg``.
+
+    The manual tp path shards attention heads and MLP ff Megatron-style
+    (DESIGN.md §8), so it is limited to dense decoder blocks whose head /
+    kv-head / ff counts divide tp; MoE / SSM / hybrid blocks keep tp as a
+    cost-model dimension until their expert/state sharding is realized."""
+    if tp == 1:
+        return
+    kind = M._block_kind(cfg)
+    if kind != "dense" or cfg.hybrid_attn_every or cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            f"tensor_parallel={tp}: the 2-D (pipe, tp) runtime shards "
+            f"dense decoder blocks only; {cfg.name} has block kind "
+            f"{kind!r} (family {cfg.family!r}) — tp stays a cost-model "
+            f"dimension for it (DESIGN.md §8)")
+    for what, n in (("num_heads", cfg.num_heads),
+                    ("num_kv_heads", cfg.num_kv_heads),
+                    ("d_ff", cfg.d_ff)):
+        if n % tp:
+            raise ValueError(
+                f"tensor_parallel={tp} does not divide {cfg.name}.{what}"
+                f"={n}; pick a tp that divides heads, kv heads and d_ff")
+
+
+def _tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The per-member view of the model: each tp member owns 1/tp of the
+    heads, kv heads and ff width; everything else (d_model, head_dim,
+    rope, norms) is unchanged."""
+    if tp == 1:
+        return cfg
+    return dataclasses.replace(cfg, num_heads=cfg.num_heads // tp,
+                               num_kv_heads=cfg.num_kv_heads // tp,
+                               d_ff=cfg.d_ff // tp)
+
+
+def _tp_block_forward(p, cfg: ModelConfig, lcfg: ModelConfig, x,
+                      tp_axis: str):
+    """One dense block with manual Megatron tensor parallelism: the
+    params are the LOCAL tp shards (column-parallel wq/wk/wv/wi/wg, row-
+    parallel wo — ``sharding/rules.py`` placement), so attention runs on
+    the member's heads and the MLP on its ff slice; each sub-block's
+    row-parallel output projection yields a PARTIAL sum that a psum over
+    the tp axis completes BEFORE the residual add, keeping activations
+    (and the norms that consume them) replicated across tp."""
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    a = attention.self_attention(p["attn"], lcfg, h)
+    x = x + jax.lax.psum(a, tp_axis)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    y = layers.apply_mlp(p["mlp"], h, cfg.mlp)
+    return x + jax.lax.psum(y, tp_axis), {}
+
+
+def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool,
+                   *, tp_axis: Optional[str] = None,
+                   lcfg: Optional[ModelConfig] = None):
+    """Run Lmax (padded) layers; masked layers are identity.  With
+    ``tp_axis`` set, each layer is the manual tensor-parallel dense block
+    (every member runs the same psums, padded layers included, so the
+    program stays SPMD-uniform)."""
 
     def one(x, inp):
         p, valid = inp
-        y, m = tfm.block_forward(p, cfg, x, kind)
+        if tp_axis is None:
+            y, m = tfm.block_forward(p, cfg, x, kind)
+        else:
+            y, m = _tp_block_forward(p, cfg, lcfg, x, tp_axis)
         aux = m.get("moe_aux_loss", 0.0) + m.get("moe_z_loss", 0.0)
         x = jnp.where(valid, y, x)
         # rank-1, not scalar: rank-0 float consts become implicit
@@ -377,8 +471,11 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                             *, remat: bool = True,
                             schedule: Optional[str] = None):
     """Returns loss_fn(stage_params, mask, tokens) -> scalar loss, where
-    inside ``shard_map`` each pipe-axis member holds ONE physical stage
-    (v chunk slots of layers for chunked schedules).
+    inside ``shard_map`` each pipe-axis ROW holds ONE physical stage
+    (v chunk slots of layers for chunked schedules).  With
+    ``spec.tensor_parallel > 1`` the mesh is 2-D ``(pipe, tp)`` and both
+    axes are manual: the tp members of a row share the stage Megatron-
+    style (DESIGN.md §8) while activations stream along pipe rows only.
 
     tokens: (b, mb_size, S_seq) — b microbatches, streamed through the
     schedule's static tick program (:func:`spmd_tick_tables`): per tick
@@ -391,6 +488,22 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     nstages = spec.num_stages
     v = spec.n_chunks
     b = spec.microbatches
+    tp = spec.tensor_parallel
+    tp_axis = spec.tp_axis if tp > 1 else None
+    validate_tensor_parallel(cfg, tp)
+    if mesh.shape[axis] != nstages:
+        raise ValueError(
+            f"mesh axis {axis!r} has size {mesh.shape[axis]} but the "
+            f"PipelineSpec has {nstages} physical stages")
+    if tp > 1 and spec.tp_axis not in mesh.axis_names:
+        raise ValueError(
+            f"spec.tensor_parallel={tp} needs a {spec.tp_axis!r} mesh "
+            f"axis; got axes {mesh.axis_names}")
+    if spec.tp_axis in mesh.axis_names and mesh.shape[spec.tp_axis] != tp:
+        raise ValueError(
+            f"mesh axis {spec.tp_axis!r} has size "
+            f"{mesh.shape[spec.tp_axis]} but spec.tensor_parallel={tp}")
+    lcfg = _tp_local_cfg(cfg, tp)
     from .schedules import get_schedule
     sched = get_schedule(schedule or spec.schedule)
     if sched.n_chunks != v:
@@ -462,7 +575,8 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                                                     keepdims=False)
             else:
                 blk, mrow = blocks, mask_dev
-            y, aux = _stage_forward(blk, mrow, cfg, x, kind, remat)
+            y, aux = _stage_forward(blk, mrow, cfg, x, kind, remat,
+                                    tp_axis=tp_axis, lcfg=lcfg)
             # the member hosting the last global stage computes the LM
             # loss for its finished microbatch
             h = layers.apply_norm(fnorm, y, cfg.norm)
@@ -508,23 +622,31 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         return loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
 
     aps = abstract_stage_params(cfg, spec)
+    from ..sharding import rules
+    blk_specs = rules.stage_block_specs(
+        aps["blocks"], pipe_axis=axis, tp_axis=tp_axis,
+        stacked_prefix=1 + (1 if v == 1 else 2))
     in_specs = (
         {
-            "blocks": jax.tree.map(lambda _: P(axis), aps["blocks"]),
+            "blocks": blk_specs,
             "embed": jax.tree.map(lambda _: P(), aps["embed"]),
             "final_norm": jax.tree.map(lambda _: P(), aps["final_norm"]),
         },
         P(axis),
         P(),
     )
-    # manual over the pipe axis only; data/model stay GSPMD-automatic
+    # manual over the pipe (and, when present, tp) axis; any other mesh
+    # axes stay GSPMD-automatic
+    manual = {axis} | ({spec.tp_axis} & set(mesh.axis_names))
+    out_axes = tuple(a for a in (axis, spec.tp_axis)
+                     if a in mesh.axis_names)
     from .jax_compat import shard_map
     smapped = shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
-                        out_specs=P(axis), manual_axes={axis})
+                        out_specs=P(out_axes), manual_axes=manual)
 
     def loss_fn(stage_params, mask, tokens):
-        # (S,) identical per-member copies -> scalar (mean keeps the
-        # cotangent uniform across members; each carries 1/S of it)
+        # (S·tp,) identical per-member copies -> scalar (mean keeps the
+        # cotangent uniform across members; each carries 1/(S·tp) of it)
         return jnp.mean(smapped(stage_params, mask, tokens))
 
     return loss_fn

@@ -16,14 +16,13 @@ allocation), compiles under GSPMD, and records:
 
 into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
 """
-import os
+from .hostdevices import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+force_host_device_count(512)
 
 import argparse      # noqa: E402
 import json          # noqa: E402
+import os            # noqa: E402
 import re            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402

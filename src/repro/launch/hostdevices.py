@@ -1,0 +1,18 @@
+"""Force the XLA host-platform (virtual CPU) device count.
+
+jax-free on purpose: callers mutate ``XLA_FLAGS`` BEFORE jax creates its
+backends, so this module must be importable without touching jax.
+"""
+import os
+import re
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> None:
+    """Pin the host device count to ``n``, keeping every other inherited
+    XLA flag.  Any inherited count is STRIPPED, not merely prepended
+    over: XLA takes the LAST occurrence of a repeated flag, so a plain
+    prepend loses to e.g. the CI 8-virtual-device job's environment."""
+    rest = re.sub(_FLAG + r"=\d+\s*", "", os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = f"{_FLAG}={n} {rest}".strip()

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1p5_0p5b \
         --steps 100 --batch 8 --seq 256 [--model-parallel 1] [--accum 1] \
-        [--pipeline-parallel 4 --schedule 1f1b --microbatches 4] \
+        [--pipeline-parallel 4 --tensor-parallel 2 --schedule 1f1b \
+         --microbatches 4] \
         [--plan plan.json | --search A:2,B:2] \
         [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
 
@@ -12,13 +13,16 @@ drive the production mesh.  ``--smoke`` selects the reduced config family.
 N devices; ``--schedule`` picks the pipeline schedule (see
 ``repro.core.schedules``) — chunked schedules (``interleaved``, ``zb_v``)
 run with v chunk slots per device via the schedule-derived tick tables.
-``--plan plan.json`` executes a saved HeteroAuto ``ParallelPlan`` (see
-``examples/hetero_search.py --save-plan``) through ``heteropp.from_plan``
-— schedule AND non-uniform layer split included; ``--search A:2,B:2``
-runs the HeteroAuto search on the given chip cluster first and executes
-the winner the same way (the plan's total pipeline depth must fit the
-available devices; tp/dp are cost-model dimensions the local pipe mesh
-does not realize).
+``--tensor-parallel N`` adds a second manual mesh axis: each stage is
+sharded Megatron-style over N tp members of a 2-D ``(pipe, tp)`` mesh
+(DESIGN.md §8).  ``--plan plan.json`` executes a saved HeteroAuto
+``ParallelPlan`` (see ``examples/hetero_search.py --save-plan``) through
+``heteropp.from_plan`` — schedule, non-uniform layer split AND the
+plan's (uniform) tp included; ``--search A:2,B:2`` runs the HeteroAuto
+search on the given chip cluster first and executes the winner the same
+way (pp·tp must fit the available devices; plans with NON-uniform
+per-stage tp are refused — asymmetric intra-stage parallelism stays a
+cost-model dimension; dp likewise).
 """
 from __future__ import annotations
 
@@ -49,8 +53,8 @@ def _pipeline_spec(args, cfg):
     if args.plan and args.search:
         raise SystemExit("--plan and --search are mutually exclusive")
     if args.plan or args.search:
-        # the plan carries schedule and stage count; conflicting explicit
-        # flags would be silently ignored — refuse instead
+        # the plan carries schedule, stage count AND tp; conflicting
+        # explicit flags would be silently ignored — refuse instead
         src = "--plan" if args.plan else "--search"
         if args.schedule is not None:
             raise SystemExit(f"{src} uses the plan's schedule; drop "
@@ -58,13 +62,27 @@ def _pipeline_spec(args, cfg):
         if args.pipeline_parallel > 1:
             raise SystemExit(f"{src} sets the stage count from the plan; "
                              f"drop --pipeline-parallel")
+        if args.tensor_parallel:
+            raise SystemExit(f"{src} sets tp from the plan (uniform plans "
+                             f"execute it on the (pipe, tp) mesh); drop "
+                             f"--tensor-parallel {args.tensor_parallel}")
+
+    def _from_plan(plan):
+        try:
+            spec = HP.from_plan(plan, microbatches=mb or None,
+                                execute_tp=True)
+            HP.validate_tensor_parallel(cfg, spec.tensor_parallel)
+            return spec
+        except (ValueError, NotImplementedError) as e:
+            raise SystemExit(str(e)) from None
+
     if args.plan:
         import json
         from ..core.cost_model import ParallelPlan
         with open(args.plan) as f:
             plan = ParallelPlan.from_dict(json.load(f))
         print(f"plan [{args.plan}]: {plan.describe()}")
-        return HP.from_plan(plan, microbatches=mb or None)
+        return _from_plan(plan)
     if args.search:
         from ..core import chips, heteroauto
         groups = []
@@ -78,15 +96,20 @@ def _pipeline_spec(args, cfg):
                              f"{cfg.name}")
         print(f"searched plan ({r.evaluated} configs, {r.search_time_s:.2f}s): "
               f"{r.plan.describe()}")
-        return HP.from_plan(r.plan, microbatches=mb or None)
+        return _from_plan(r.plan)
     from ..core.schedules import get_schedule
     pp = args.pipeline_parallel
+    tp = args.tensor_parallel or 1
+    try:
+        HP.validate_tensor_parallel(cfg, tp)
+    except (ValueError, NotImplementedError) as e:
+        raise SystemExit(str(e)) from None
     sched = get_schedule(args.schedule or "1f1b")
     base, rem = divmod(cfg.num_layers, pp)
     phys = [base + (1 if i < rem else 0) for i in range(pp)]
     return HP.PipelineSpec(pp, HP.chunk_layer_counts(phys, sched),
                            microbatches=mb or pp, schedule=sched.name,
-                           n_chunks=sched.n_chunks)
+                           n_chunks=sched.n_chunks, tensor_parallel=tp)
 
 
 def run_pipeline(args, cfg):
@@ -98,11 +121,15 @@ def run_pipeline(args, cfg):
 
     devices = jax.devices()
     spec = _pipeline_spec(args, cfg)
-    pp = spec.num_stages
-    if len(devices) < pp:
-        raise SystemExit(f"pipeline needs ≥{pp} devices (have "
-                         f"{len(devices)})")
-    mesh = Mesh(np.array(devices[:pp]), ("pipe",))
+    pp, tp = spec.num_stages, spec.tensor_parallel
+    if len(devices) < pp * tp:
+        raise SystemExit(f"pipeline needs ≥{pp}·{tp}={pp * tp} devices "
+                         f"(have {len(devices)})")
+    if tp > 1:
+        mesh = Mesh(np.array(devices[:pp * tp]).reshape(pp, tp),
+                    ("pipe", "tp"))
+    else:
+        mesh = Mesh(np.array(devices[:pp]), ("pipe",))
 
     mb = spec.microbatches
     if args.batch % mb:
@@ -111,7 +138,7 @@ def run_pipeline(args, cfg):
     if spec.total_layers != cfg.num_layers:
         raise SystemExit(f"plan covers {spec.total_layers} layers but "
                          f"{cfg.name} has {cfg.num_layers}")
-    print(f"pipeline: stages={pp} v={spec.n_chunks} "
+    print(f"pipeline: stages={pp} tp={tp} v={spec.n_chunks} "
           f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
           f"schedule={spec.schedule}")
 
@@ -136,7 +163,7 @@ def run_pipeline(args, cfg):
         state, m = step_fn(state, mask, {"tokens": toks})
         if (i + 1) % args.log_every == 0 or i == 0:
             dt = time.perf_counter() - t0
-            tgs = tokens_per_step * (i + 1) / dt / pp
+            tgs = tokens_per_step * (i + 1) / dt / (pp * tp)
             print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
                   f"TGS={tgs:.0f}", flush=True)
     loader.close()
@@ -153,6 +180,11 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--pipeline-parallel", type=int, default=1,
                     help="run the shard_map pipeline over N stages")
+    ap.add_argument("--tensor-parallel", type=int, default=0,
+                    help="with --pipeline-parallel: shard every stage "
+                         "over N tp members on a 2-D (pipe, tp) mesh "
+                         "(default 1; saved/searched plans carry their "
+                         "own tp and refuse this flag)")
     ap.add_argument("--schedule", default=None,
                     choices=available_schedules(),
                     help="pipeline schedule (with --pipeline-parallel; "
@@ -183,6 +215,12 @@ def main():
     if args.pipeline_parallel > 1 or args.plan or args.search:
         run_pipeline(args, cfg)
         return
+    if args.tensor_parallel:
+        # the GSPMD path below would silently ignore it — refuse instead
+        raise SystemExit(
+            f"--tensor-parallel {args.tensor_parallel} only applies to the "
+            f"shard_map pipeline; add --pipeline-parallel N (or use "
+            f"--model-parallel for GSPMD tensor parallelism)")
 
     mesh = make_local_mesh(model=args.model_parallel)
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,

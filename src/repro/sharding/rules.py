@@ -28,6 +28,10 @@ PyTree = Any
 
 DATA_AXES = ("pod", "data")   # flattened into the batch dim
 MODEL_AXIS = "model"
+# Axes playing the tensor-parallel role, in preference order.  Production
+# meshes name it ``model``; the HeteroPP 2-D pipeline mesh (and ad-hoc
+# test meshes) name it ``tp`` (DESIGN.md §8).
+MODEL_AXES = ("model", "tp")
 
 
 def _fits(dim: int, mesh: Mesh, axes: Sequence[str]) -> bool:
@@ -40,9 +44,18 @@ def _fits(dim: int, mesh: Mesh, axes: Sequence[str]) -> bool:
 
 
 def _axis(mesh: Mesh, dim: int, *cands: Any) -> Optional[Any]:
-    """First candidate (axis name or tuple) that divides ``dim``."""
+    """First candidate (axis name or tuple) that divides ``dim``.  The
+    ``MODEL_AXIS`` candidate resolves against whichever tensor-parallel
+    axis the mesh actually names (``model`` on production meshes, ``tp``
+    on pipeline / ad-hoc meshes)."""
     for c in cands:
+        if isinstance(c, str) and c == MODEL_AXIS:
+            c = model_axis(mesh)
+            if c is None:
+                continue
         axes = (c,) if isinstance(c, str) else tuple(c)
+        if not axes:        # e.g. data_axes() on a mesh with no data axis
+            continue
         if _fits(dim, mesh, axes):
             return c if isinstance(c, str) else tuple(axes)
     return None
@@ -50,6 +63,15 @@ def _axis(mesh: Mesh, dim: int, *cands: Any) -> Optional[Any]:
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    """The mesh's tensor-parallel axis name (first of ``MODEL_AXES``
+    present), or None when the mesh names neither."""
+    for a in MODEL_AXES:
+        if a in mesh.axis_names:
+            return a
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +160,61 @@ def tree_param_specs(params: PyTree, mesh: Mesh, *, hybrid: bool = False,
     return jax.tree_util.tree_map_with_path(spec_for, params)
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel placement for the HeteroPP 2-D (pipe × tp) mesh
+# ---------------------------------------------------------------------------
+
+# Megatron convention inside one decoder block: QKV projections and the
+# MLP up/gate projections are COLUMN-parallel (output dim sharded, no
+# collective needed — heads / ff slices stay local), the output
+# projections ``wo`` are ROW-parallel (input dim sharded; a psum over the
+# tp axis rebuilds the full activation before the residual add).  Norm
+# scales, per-head qk-norms, and everything else stay replicated.
+TP_COLUMN_PARAMS = frozenset({"wq", "wk", "wv", "bq", "bk", "bv",
+                              "wi", "wg"})
+TP_ROW_PARAMS = frozenset({"wo"})
+
+
+def tp_body_dim(path: str, body_ndim: int) -> Optional[int]:
+    """Which body dim (stacked-layer dims stripped) of a block parameter
+    the tp axis shards, or None for replicated.  Only the 2-D matmul
+    weights and 1-D qkv biases of dense blocks participate; MoE expert
+    weights (3-D bodies) and SSM params are replicated — the runtime
+    refuses tp > 1 for those block kinds (DESIGN.md §8)."""
+    name = path.split("/")[-1]
+    if body_ndim == 2 and name in TP_COLUMN_PARAMS:
+        return 1
+    if body_ndim == 1 and name in TP_COLUMN_PARAMS:
+        return 0
+    if body_ndim == 2 and name in TP_ROW_PARAMS:
+        return 0
+    return None
+
+
+def stage_block_specs(blocks: PyTree, *, pipe_axis: str = "pipe",
+                      tp_axis: Optional[str] = "tp",
+                      stacked_prefix: int = 2) -> PyTree:
+    """PartitionSpec tree for heteropp's stacked per-stage block params:
+    leading stage dim over ``pipe_axis``, the remaining
+    ``stacked_prefix − 1`` stacked layer/chunk dims replicated, and the
+    Megatron column/row dim (:func:`tp_body_dim`) over ``tp_axis``.
+    ``tp_axis=None`` keeps params tp-replicated (the 1-D pipe mesh)."""
+    flat = jax.tree_util.tree_map_with_path
+
+    def spec_for(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        dims: list = [None] * leaf.ndim
+        dims[0] = pipe_axis
+        if tp_axis is not None:
+            d = tp_body_dim(path, leaf.ndim - stacked_prefix)
+            if d is not None:
+                dims[stacked_prefix + d] = tp_axis
+        return P(*dims)
+
+    return flat(spec_for, blocks)
+
+
 def tree_param_shardings(params: PyTree, mesh: Mesh, **kw) -> PyTree:
     specs = tree_param_specs(params, mesh, **kw)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
@@ -191,9 +268,10 @@ def cache_shardings(cache_shape, mesh: Mesh):
                 # per-token dynamic cache update shard-local); fall back to
                 # the longest trailing dim (sequence) when heads don't
                 # divide — flash-decode-style partial softmax handles it
-                if _fits(leaf.shape[2], mesh, (MODEL_AXIS,)) and \
-                        leaf.shape[2] >= mesh.shape[MODEL_AXIS]:
-                    s[2] = MODEL_AXIS
+                ma = model_axis(mesh)
+                if ma is not None and _fits(leaf.shape[2], mesh, (ma,)) and \
+                        leaf.shape[2] >= mesh.shape[ma]:
+                    s[2] = ma
                 else:
                     trail = list(range(2, 5))
                     big = max(trail, key=lambda i: leaf.shape[i])

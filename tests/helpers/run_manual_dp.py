@@ -1,10 +1,8 @@
 """Subprocess helper: manual-collective ZeRO-1 DP on 8 virtual devices,
 numerics vs the GSPMD train step."""
-import os
+from repro.launch.hostdevices import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 "
-    + os.environ.get("XLA_FLAGS", ""))
+force_host_device_count(8)
 
 import dataclasses
 

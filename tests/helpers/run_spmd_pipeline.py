@@ -9,11 +9,9 @@ other and matching the monolithic model / simulate_pipeline_forward.
 Run as a script (spawned by tests/test_heteropp.py) so the forced device
 count never leaks into the main pytest process.
 """
-import os
+from repro.launch.hostdevices import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=4 "
-    + os.environ.get("XLA_FLAGS", ""))
+force_host_device_count(4)
 
 import dataclasses
 import sys

@@ -89,9 +89,8 @@ def test_sr_ag_boundary_time_faster():
 def test_reshard_shard_map_equivalence():
     """naive and SR&AG reshard produce identical values on a pipe×tp mesh."""
     script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                                   + os.environ.get("XLA_FLAGS", ""))
+        from repro.launch.hostdevices import force_host_device_count
+        force_host_device_count(8)
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.resharding import reshard
         mesh = jax.make_mesh((2, 4), ("pipe", "tp"))

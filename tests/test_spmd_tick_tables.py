@@ -1,0 +1,103 @@
+"""Property-based tests (tests/hypothesis_compat.py) for
+``heteropp.spmd_tick_tables`` — the difference-constraint solver that
+turns a Schedule's per-stage forward orders into the SPMD scan's static
+tick program (DESIGN.md §7):
+
+* any single-chunk schedule whose stages stream microbatches in ONE
+  common order is streamable, and the injection order round-trips
+  through the solver (tables reproduce it exactly, in b + S − 1 ticks);
+* perturbing ONE stage's forward order against the others creates a
+  positive cycle in the constraints — the solver must REJECT it rather
+  than emit a wrong tick program;
+* op lists that do not cover every (microbatch, chunk) exactly once are
+  rejected up front.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.heteropp import SRC_INJECT, SRC_PREV, spmd_tick_tables
+from repro.core.schedules.base import Op, Schedule
+
+
+class _RowsSchedule(Schedule):
+    """Single-chunk test schedule with explicit per-stage forward orders
+    (backwards appended in reverse so derived profiles stay sane)."""
+
+    n_chunks = 1
+
+    def __init__(self, rows):
+        super().__init__()
+        self.name = "_rows"
+        self._rows = [list(r) for r in rows]
+
+    def ops(self, S, b):
+        assert S == len(self._rows), (S, self._rows)
+        return [[Op("F", m) for m in row] +
+                [Op("B", m) for m in reversed(row)]
+                for row in self._rows]
+
+
+def _perm(seed, b):
+    return list(np.random.default_rng(seed).permutation(b))
+
+
+@settings(max_examples=40)
+@given(st.integers(2, 5), st.integers(2, 6), st.integers(0, 10 ** 6))
+def test_streamable_orders_roundtrip(S, b, seed):
+    order = _perm(seed, b)
+    t = spmd_tick_tables(_RowsSchedule([order] * S), S, b)
+    assert t.ticks == b + S - 1
+    for s in range(S):
+        ticks = [k for k in range(t.ticks) if t.active[k, s]]
+        # the tight stream: stage s runs the same order, s ticks later
+        assert ticks == [r + s for r in range(b)], (s, ticks)
+        assert [int(t.mb[k, s]) for k in ticks] == order, (s, order)
+        want_src = SRC_INJECT if s == 0 else SRC_PREV
+        assert all(int(t.src[k, s]) == want_src for k in ticks), s
+        # only the stage hosting the last global stage emits losses
+        assert bool(t.emit[:, s].any()) == (s == S - 1)
+
+
+@settings(max_examples=40)
+@given(st.integers(2, 5), st.integers(2, 6), st.integers(0, 10 ** 6))
+def test_perturbed_orders_rejected(S, b, seed):
+    """Swapping two microbatches in ONE stage's order (leaving the others
+    alone) admits no single stream: the solver must refuse, never emit a
+    wrong program."""
+    rng = np.random.default_rng(seed)
+    order = list(rng.permutation(b))
+    i, j = sorted(rng.choice(b, size=2, replace=False))
+    bad = list(order)
+    bad[i], bad[j] = bad[j], bad[i]
+    rows = [list(order) for _ in range(S)]
+    rows[int(rng.integers(S))] = bad
+    with pytest.raises(NotImplementedError,
+                       match="tight tick-synchronous stream"):
+        spmd_tick_tables(_RowsSchedule(rows), S, b)
+
+
+@settings(max_examples=20)
+@given(st.integers(2, 4), st.integers(2, 6), st.integers(0, 10 ** 6))
+def test_non_covering_orders_rejected(S, b, seed):
+    """Duplicating one microbatch (dropping another) breaks the exactly-
+    once coverage invariant and is rejected before any solving."""
+    rng = np.random.default_rng(seed)
+    order = list(rng.permutation(b))
+    bad = list(order)
+    bad[0] = bad[-1]                       # duplicate one, drop another
+    rows = [list(order) for _ in range(S)]
+    rows[int(rng.integers(S))] = bad
+    with pytest.raises(NotImplementedError, match="exactly once"):
+        spmd_tick_tables(_RowsSchedule(rows), S, b)
+
+
+def test_identity_order_matches_library_single_chunk():
+    """The identity stream is exactly what the library's single-chunk
+    schedules produce (cross-check against schedule_injection_order)."""
+    from repro.core.heteropp import schedule_injection_order
+    S, b = 3, 5
+    t = spmd_tick_tables(_RowsSchedule([list(range(b))] * S), S, b)
+    lib = spmd_tick_tables("1f1b", S, b)
+    assert (t.mb == lib.mb).all() and (t.active == lib.active).all()
+    assert schedule_injection_order("1f1b", S, b) == list(range(b))

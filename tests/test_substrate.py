@@ -119,6 +119,61 @@ def test_param_specs_divisibility_fallback():
     assert s[0] == "model"
 
 
+def _pipe_tp_mesh(pipe=2, tp=2):
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh((pipe, tp), ("pipe", "tp"))
+    except TypeError:   # legacy signature: tuple of (name, size) pairs
+        return AbstractMesh((("pipe", pipe), ("tp", tp)))
+
+
+def test_param_spec_resolves_tp_axis_on_pipe_tp_mesh():
+    """Regression (ISSUE 3): _axis/param_spec probed only the production
+    axis names, so every spec came back fully replicated on the ad-hoc
+    2-D (pipe, tp) meshes the HeteroPP runtime builds — the tp axis must
+    resolve wherever ``model`` would."""
+    from repro.sharding.rules import model_axis, param_spec
+    mesh = _pipe_tp_mesh()
+    assert model_axis(mesh) == "tp"
+    assert model_axis(_mesh()) == "model"      # preference order intact
+    s = param_spec("embed/tok", (512, 256), mesh)
+    assert s[0] == "tp"                        # vocab over tp
+    s = param_spec("blocks/mlp/wi", (4, 256, 512), mesh, stacked_prefix=1)
+    assert "tp" in (s[1], s[2])
+    # indivisible dims still drop the axis, never an error
+    s = param_spec("blocks/mlp/wi", (4, 255, 511), mesh, stacked_prefix=1)
+    assert s[1] is None and s[2] is None
+
+
+def test_stage_block_specs_megatron_placement():
+    """The 2-D runtime's stacked stage-param placement (DESIGN.md §8):
+    pipe on the stage dim, tp on the Megatron column/row dim by name,
+    norms replicated."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import stage_block_specs, tp_body_dim
+    sds = lambda *s: jax.ShapeDtypeStruct(s, "float32")
+    blocks = {"attn": {"wq": sds(2, 1, 256, 128), "wo": sds(2, 1, 128, 256)},
+              "mlp": {"wi": sds(2, 1, 256, 512), "wg": sds(2, 1, 256, 512),
+                      "wo": sds(2, 1, 512, 256)},
+              "ln1": {"scale": sds(2, 1, 256)}}
+    specs = stage_block_specs(blocks, pipe_axis="pipe", tp_axis="tp",
+                              stacked_prefix=2)
+    assert specs["attn"]["wq"] == P("pipe", None, None, "tp")   # column
+    assert specs["attn"]["wo"] == P("pipe", None, "tp", None)   # row
+    assert specs["mlp"]["wi"] == P("pipe", None, None, "tp")
+    assert specs["mlp"]["wo"] == P("pipe", None, "tp", None)
+    assert specs["ln1"]["scale"] == P("pipe", None, None)       # replicated
+    # tp_axis=None (the 1-D pipe mesh) keeps everything tp-replicated
+    specs1 = stage_block_specs(blocks, pipe_axis="pipe", tp_axis=None,
+                               stacked_prefix=2)
+    assert all(s == P("pipe", *[None] * (len(s) - 1))
+               for s in jax.tree.leaves(specs1,
+                                        is_leaf=lambda x: isinstance(x, P)))
+    assert tp_body_dim("blocks/attn/bq", 1) == 0      # 1-D qkv bias
+    assert tp_body_dim("blocks/moe/wi", 3) is None    # MoE experts: refuse
+
+
 @given(st.sampled_from([1024, 2048, 4608, 6144]),
        st.sampled_from([768, 1408, 10752, 18432, 151936]))
 @settings(max_examples=20, deadline=None)
