@@ -3,10 +3,13 @@ relative iteration time of DDR vs TCP transport, HeteroPP vs uniform layer
 split, SR&AG resharding on/off, fine-grained overlap on/off, pipeline
 SCHEDULE (GPipe / 1F1B / interleaved / ZB-H1 / ZB-V, the §5 wgrad-overlap
 ablation; backward-split rows use the profiler's analytic per-stage
-dgrad/wgrad fractions), and a tp ablation (uniform executable tp — the
+dgrad/wgrad fractions), a tp ablation (uniform executable tp — the
 shape the 2-D (pipe, tp) runtime can run, DESIGN.md §8 — vs the searched
-per-stage tp) — replayed through the generic event-driven schedule
-simulator.
+per-stage tp), and a dp ablation (DESIGN.md §9: flat-psum vs bucketed
+ZeRO-1 reduce-scatter gradient sync over the comm/latency transports,
+plus uniform vs throughput-proportional batch domains across
+heterogeneous replica sets) — replayed through the generic event-driven
+schedule simulator and the dataparallel closed forms.
 
     PYTHONPATH=src python -m benchmarks.bench_ablation [--schedule 1f1b]
 
@@ -105,6 +108,77 @@ def main(argv=None):
              f"what-if uniform tp={tp_f} vs searched per-stage tp={tps}, "
              f"same pp/layer split — uses {forced.total_chips} chips vs "
              f"the plan's {plan.total_chips}")
+
+    # dp ablation (DESIGN.md §9).  (a) Gradient-sync mode: per-bucket
+    # byte accounting of the pacing stage's gradient volume under the
+    # DiComm transports — flat psum (one fused all-reduce, replicated
+    # optimizer state) vs bucketed ZeRO-1 reduce-scatter + all-gather
+    # (dp-sharded optimizer state); the memory rows show what the mode
+    # buys on small chips.
+    from repro.core.cost_model import evaluate
+    from repro.core.dataparallel import (bucketize, domain_cost, partition,
+                                         sync_time)
+    from repro.core.profiler import layer_param_count
+    dp_eff = plan.dp if plan.dp > 1 else 4
+    whatif = "" if plan.dp > 1 else f" (what-if dp={dp_eff}; plan has dp=1)"
+    pace_stage = max(plan.stages,
+                     key=lambda s: s.layers_per_stage *
+                     layer_param_count(cfg) * 2 / s.tp)
+    per_layer = int(layer_param_count(cfg) * 2 / pace_stage.tp)
+    pace = pace_stage.layers_per_stage * per_layer
+    buckets = bucketize([(f"layer{i}", per_layer)
+                         for i in range(pace_stage.layers_per_stage)],
+                        bucket_bytes=25 * 2 ** 20)
+    for transport in ("device_rdma", "cpu_tcp"):
+        ps = sync_time(buckets, dp_eff, transport, "psum")
+        rs = sync_time(buckets, dp_eff, transport, "reduce_scatter")
+        emit(f"table_dp.sync.psum.{transport}", f"{ps['total'] * 1e3:.2f}ms",
+             f"{ps['messages']} msgs, pacing stage "
+             f"{pace / 2 ** 20:.0f}MiB grads{whatif}")
+        emit(f"table_dp.sync.rs_ag.{transport}", f"{rs['total'] * 1e3:.2f}ms",
+             f"{rs['messages']} msgs over {buckets.num_buckets} buckets"
+             f"{whatif}")
+    dp_plan = dataclasses.replace(plan, dp=dp_eff) if plan.dp == 1 else plan
+    mem_rs = evaluate(dp_plan, cfg, 4096, 4 * 2 ** 20)
+    mem_ps = evaluate(dp_plan, cfg, 4096, 4 * 2 ** 20, dp_sync="psum")
+    emit("table_dp.mem.rs_ag",
+         f"{max(mem_rs.stage_mem_gb):.1f}GB",
+         f"worst-stage memory, ZeRO-1 opt state /dp={dp_plan.dp}{whatif}")
+    emit("table_dp.mem.psum",
+         f"{max(mem_ps.stage_mem_gb):.1f}GB",
+         f"worst-stage memory, replicated opt state"
+         f" (feasible={mem_ps.feasible} vs rs {mem_rs.feasible}){whatif}")
+
+    # (b) Batch domains: run the Exp-C-1 chip groups as SEPARATE
+    # homogeneous replica sets (one A-pipeline + one B-pipeline replica)
+    # and split the global batch uniformly vs proportionally to each
+    # replica's modeled throughput — the paper's inter-replica load
+    # balancing (§4, Table 7).
+    batch_seqs = 4 * 2 ** 20 // 4096
+    homo = []
+    for g in groups:
+        t6 = chips.TABLE6.get(g.spec.name)
+        hb = heteroauto.homogeneous_baseline(
+            g, cfg, 2 * 2 ** 20, 4096, allow_offload=True,
+            fixed={"dp": t6["dp"], "tp": t6["tp"],
+                   "recompute": t6["recompute"]} if t6 else None)
+        homo.append((g, hb))
+    if all(hb.plan is not None for _, hb in homo):
+        t_mb = [hb.cost.iter_time / hb.plan.microbatches for _, hb in homo]
+        rates = [1.0 / t for t in t_mb]
+        dom_h = partition(batch_seqs, rates)
+        base = batch_seqs // len(homo)
+        alloc_u = [base] * len(homo)
+        alloc_u[-1] += batch_seqs - base * len(homo)
+        dom_u = dataclasses.replace(dom_h, allocations=tuple(alloc_u))
+        ch, cu = domain_cost(dom_h, t_mb), domain_cost(dom_u, t_mb)
+        emit("table_dp.domain.uniform", f"{cu['iter_time']:.2f}s",
+             f"even batch split over {len(homo)} hetero replica sets, "
+             f"imbalance={cu['imbalance']:.1%}")
+        emit("table_dp.domain.hetero", f"{ch['iter_time']:.2f}s",
+             f"throughput-proportional domain {list(dom_h.allocations)}, "
+             f"imbalance={ch['imbalance']:.1%} "
+             f"(speedup {cu['iter_time'] / ch['iter_time']:.2f}x)")
 
     # Fig 12: small-scale e2e DDR vs TCP (8-layer model, TP4 PP2 DP2)
     small = dataclasses.replace(cfg, num_layers=8)

@@ -1,19 +1,24 @@
 """Benchmark suite entrypoint: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
-prints ``name,value,derived`` CSV rows per benchmark.
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json-out F]``
+prints ``name,value,derived`` CSV rows per benchmark and writes the same
+rows machine-readably to ``BENCH_ablation.json`` (suite → row list), so
+the perf trajectory of the ablation tables is diffable across PRs.
 """
 import argparse
 import importlib
+import json
 import sys
 import traceback
+
+from . import common
 
 SUITES = [
     "bench_precision",     # Fig 5 / Table 1  (DiTorch alignment)
     "bench_dicomm",        # Fig 7 / Table 3  (DiComm latency, NIC affinity)
     "bench_homogeneous",   # Table 6          (homogeneous TGS baselines)
     "bench_hetero",        # Table 7 / Fig 11 / Table 8 (HeteroAuto)
-    "bench_ablation",      # Table 9 / Fig 12 (ablations)
+    "bench_ablation",      # Table 9 / Fig 12 + dp ablations (DESIGN.md §9)
     "bench_kernels",       # kernel structure + correctness
     "roofline",            # assignment §Roofline (reads dry-run artifacts)
 ]
@@ -22,17 +27,33 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default="BENCH_ablation.json",
+                    help="machine-readable row dump (suite -> rows); "
+                         "empty string disables")
     args = ap.parse_args()
     suites = [s for s in SUITES if args.only in (None, s)]
     failed = []
+    rows_by_suite = {}
     for name in suites:
         print(f"# === {name} ===", flush=True)
+        start = len(common.ROWS)
         try:
             mod = importlib.import_module(f".{name}", __package__)
             mod.main()
         except Exception:
             failed.append(name)
             traceback.print_exc()
+        rows_by_suite[name] = [
+            {"name": n, "value": str(v), "detail": d}
+            for n, v, d in common.ROWS[start:]]
+    if args.json_out and args.only is None:
+        with open(args.json_out, "w") as f:
+            json.dump({"suites": rows_by_suite, "failed": failed}, f,
+                      indent=2)
+        print(f"# rows written to {args.json_out}")
+    elif args.json_out:
+        # a partial --only run would clobber the full tracked dump
+        print(f"# --only set: NOT overwriting {args.json_out}")
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

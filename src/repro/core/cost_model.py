@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from .chips import ChipGroup, ChipSpec
 from .profiler import (analytic_layer_profile, layer_param_count,
@@ -50,8 +50,30 @@ class StagePlan:
 class ParallelPlan:
     stages: List[StagePlan]  # ordered: largest-memory chip type first
     dp: int
-    microbatches: int        # b = B / s_dp (microbatch = 1 sequence)
+    microbatches: int        # per-replica b (= max allocation, see below)
     schedule: str = "1f1b"   # pipeline schedule (repro.core.schedules name)
+    # Per-replica microbatch allocations when the global batch does NOT
+    # split evenly over dp (``repro.core.dataparallel.batch_domain``):
+    # len == dp, sum == global batch microbatches, and ``microbatches``
+    # is max(batch_domain) — the PACING replica the §4.3.2 max-based
+    # cost model charges.  None means the uniform domain (b each).
+    # Non-uniform domains are cost-model-only: the SPMD runtime refuses
+    # them in ``heteropp.from_plan(execute_dp=True)`` (DESIGN.md §9).
+    batch_domain: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        # real raises, not asserts: plans arrive from hand-editable JSON
+        # (launch/train.py --plan), and -O would strip asserts
+        if self.batch_domain is not None:
+            if len(self.batch_domain) != self.dp:
+                raise ValueError(
+                    f"batch_domain has {len(self.batch_domain)} "
+                    f"allocations but dp={self.dp}: {self.batch_domain}")
+            if max(self.batch_domain) != self.microbatches:
+                raise ValueError(
+                    f"microbatches must be the pacing allocation "
+                    f"max(batch_domain)={max(self.batch_domain)}, got "
+                    f"{self.microbatches} (domain {self.batch_domain})")
 
     @property
     def total_pp(self) -> int:
@@ -61,9 +83,17 @@ class ParallelPlan:
     def total_chips(self) -> int:
         return sum(s.pp * s.tp * self.dp for s in self.stages)
 
+    @property
+    def batch_seqs(self) -> int:
+        """Global batch in microbatches (sequences) per iteration."""
+        return sum(self.batch_domain) if self.batch_domain is not None \
+            else self.dp * self.microbatches
+
     def describe(self) -> str:
         parts = [f"dp={self.dp} b={self.microbatches} pp={self.total_pp} "
                  f"sched={self.schedule}"]
+        if self.batch_domain is not None:
+            parts.append(f"domain={list(self.batch_domain)}")
         for s in self.stages:
             parts.append(
                 f"{s.group.name}[pp={s.pp} tp={s.tp} l={s.layers} "
@@ -74,7 +104,7 @@ class ParallelPlan:
         """JSON-serializable form (``launch/train.py --plan`` /
         ``examples/hetero_search.py --save-plan``).  Chip specs are stored
         by catalog name and resolved through ``chips.CHIPS`` on load."""
-        return {
+        d = {
             "dp": self.dp,
             "microbatches": self.microbatches,
             "schedule": self.schedule,
@@ -83,6 +113,9 @@ class ParallelPlan:
                         "layers": s.layers, "recompute": s.recompute}
                        for s in self.stages],
         }
+        if self.batch_domain is not None:
+            d["batch_domain"] = list(self.batch_domain)
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "ParallelPlan":
@@ -92,8 +125,10 @@ class ParallelPlan:
                             sd["tp"], sd["pp"], sd["layers"],
                             sd["recompute"])
                   for sd in d["stages"]]
+        domain = d.get("batch_domain")
         return ParallelPlan(stages, d["dp"], d["microbatches"],
-                            d.get("schedule", "1f1b"))
+                            d.get("schedule", "1f1b"),
+                            tuple(domain) if domain is not None else None)
 
 
 @dataclasses.dataclass
@@ -109,6 +144,7 @@ class PlanCost:
     offload: List[bool]
     alpha: float = 1.0
     schedule: str = "1f1b"
+    dp_sync: str = "reduce_scatter"
 
 
 def stage_profiles(plan: ParallelPlan, cfg: ModelConfig, seq_len: int
@@ -121,7 +157,22 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
              gbs_tokens: float, *, alpha: Optional[float] = None,
              schedule: Optional[ScheduleLike] = None,
              allow_offload: bool = False,
-             profiles: Optional[Sequence[LayerProfile]] = None) -> PlanCost:
+             profiles: Optional[Sequence[LayerProfile]] = None,
+             dp_sync: str = "reduce_scatter") -> PlanCost:
+    """§4.3.2 closed-form cost of a plan.
+
+    ``plan.microbatches`` is the PACING replica's allocation: for plans
+    carrying a non-uniform ``batch_domain`` it is max(domain), so the
+    max-based iteration time prices the domain's imbalance exactly (the
+    runtime refuses such plans — DESIGN.md §9).  ``dp_sync`` selects the
+    gradient-sync mode the memory model assumes: ``"reduce_scatter"``
+    (ZeRO-1, the paper's default) shards optimizer state ×1/dp across
+    the dp group, ``"psum"`` keeps it replicated — the small-chip
+    feasibility difference ``benchmarks/bench_ablation.py`` ablates.
+    """
+    from .dataparallel.grad_sync import GRAD_SYNC_MODES
+    if dp_sync not in GRAD_SYNC_MODES:
+        raise ValueError(f"dp_sync {dp_sync!r} not in {GRAD_SYNC_MODES}")
     b = plan.microbatches
     sched = get_schedule(schedule if schedule is not None else plan.schedule)
     total_pp = plan.total_pp
@@ -145,7 +196,10 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
         # ---- memory (worst stage of this type = its FIRST global stage) ----
         w_bytes = lps * prof.layer_param_bytes
         grad_bytes = w_bytes                       # bf16 grads
-        opt_bytes = 6 * w_bytes / plan.dp          # fp32 master+m+v, ZeRO-1
+        # fp32 master+m+v: dp-sharded under ZeRO-1 (reduce_scatter),
+        # replicated under the flat-psum sync
+        opt_bytes = 6 * w_bytes / \
+            (plan.dp if dp_sync == "reduce_scatter" else 1)
         inflight = sched.inflight(total_pp, b, stage_offset)
         act_per_mb = lps * (prof.act_boundary_bytes if s.recompute
                             else prof.act_bytes)
@@ -177,7 +231,7 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     bubble = a * (sum_comp - min(t_comp)) / max(iter_time, 1e-9)
     tgs = gbs_tokens / (iter_time * plan.total_chips) if iter_time > 0 else 0.0
     return PlanCost(iter_time, tgs, feasible, mems, caps, t_comp, t_upd,
-                    bubble, off, a, sched.name)
+                    bubble, off, a, sched.name, dp_sync)
 
 
 # ---------------------------------------------------------------------------

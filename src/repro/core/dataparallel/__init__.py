@@ -1,0 +1,31 @@
+"""Heterogeneous data-parallel subsystem (DESIGN.md §9).
+
+Two halves, mirroring the schedule subsystem's analytic/runtime split:
+
+* :mod:`batch_domain` — the ANALYTIC side of heterogeneous dp: split the
+  global batch into per-replica microbatch allocations proportional to
+  each replica's modeled throughput (paper §4's inter-replica load
+  balancing), with divisibility rounding, per-replica memory-cap checks,
+  and exact closed-form imbalance terms.  ``heteroauto.search`` consumes
+  these for dp degrees that do not divide the global batch; non-uniform
+  allocations stay cost-model-only (the SPMD runtime refuses them, the
+  same contract as non-uniform per-stage tp — DESIGN.md §8/§9).
+
+* :mod:`grad_sync` — gradient synchronization over the dp axis: bucketed
+  byte accounting with closed-form sync times over the
+  ``repro.comm.latency`` transports (flat all-reduce vs ZeRO-1
+  reduce-scatter + all-gather), and the RUNTIME collectives the 3-D
+  (dp, pipe, tp) pipeline train step executes — ``psum`` (replicated
+  optimizer state) or ``reduce_scatter`` (dp-sharded optimizer state,
+  the memory-capped small-chip mode).
+"""
+from .batch_domain import (BatchDomain, check_memory_caps, domain_cost,
+                           partition)
+from .grad_sync import (GRAD_SYNC_MODES, GradBuckets, bucketize,
+                        replica_grad_norm, sync_time, zero1_scatter_dim)
+
+__all__ = [
+    "BatchDomain", "check_memory_caps", "domain_cost", "partition",
+    "GRAD_SYNC_MODES", "GradBuckets", "bucketize", "replica_grad_norm",
+    "sync_time", "zero1_scatter_dim",
+]

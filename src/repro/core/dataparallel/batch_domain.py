@@ -1,0 +1,146 @@
+"""Heterogeneous batch domains: per-dp-replica microbatch allocations.
+
+The paper's inter-replica load balancing (§4, Table 7) assigns each
+data-parallel replica a share of the global batch proportional to its
+throughput, so replicas built from slower chips do not pace the
+iteration.  HETHUB and HexiScale (PAPERS.md) report the same mechanism
+as the largest single recovery on heterogeneous clusters.
+
+This module is the analytic half: :func:`partition` produces the
+allocations (largest-remainder rounding on top of the proportional
+split, with a per-replica minimum), :func:`check_memory_caps` holds them
+to per-replica activation budgets, and :func:`domain_cost` gives the
+exact iteration-pacing terms the cost model charges —
+
+    T_dp = max_r  alloc_r · t_r          (the pacing replica)
+    T_lb = (Σ_r alloc_r) / (Σ_r 1/t_r)   (the fluid lower bound)
+
+with ``imbalance = T_dp / T_lb − 1`` the exact relative bubble a domain
+leaves on the table.  Uniform domains on identical replicas have
+imbalance 0; uniform domains on heterogeneous replicas are the
+"uniform" ablation row of ``benchmarks/bench_ablation.py``.
+
+Only UNIFORM domains execute on the SPMD runtime (every replica runs
+the same tick program for the same number of microbatches — one mesh,
+one program); non-uniform domains are refused by
+``heteropp.from_plan(execute_dp=True)`` and stay cost-model artifacts,
+mirroring the non-uniform-tp contract of DESIGN.md §8 (see §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDomain:
+    """Per-dp-replica microbatch allocations for one global batch.
+
+    ``allocations[r]`` is the number of microbatches replica r runs per
+    iteration; ``throughputs[r]`` is the modeled relative rate the split
+    was balanced against (microbatches per unit time; only ratios
+    matter)."""
+    allocations: tuple
+    throughputs: tuple
+
+    def __post_init__(self):
+        assert len(self.allocations) == len(self.throughputs)
+        assert all(a >= 0 for a in self.allocations), self.allocations
+        assert all(t > 0 for t in self.throughputs), self.throughputs
+
+    @property
+    def dp(self) -> int:
+        return len(self.allocations)
+
+    @property
+    def total(self) -> int:
+        return sum(self.allocations)
+
+    @property
+    def uniform(self) -> bool:
+        return len(set(self.allocations)) <= 1
+
+    @property
+    def max_allocation(self) -> int:
+        return max(self.allocations)
+
+    def describe(self) -> str:
+        return f"dp={self.dp} alloc={list(self.allocations)}"
+
+
+def partition(total_microbatches: int, throughputs: Sequence[float], *,
+              min_per_replica: int = 1, quantum: int = 1) -> BatchDomain:
+    """Split ``total_microbatches`` across replicas ∝ ``throughputs``.
+
+    Largest-remainder rounding in units of ``quantum`` microbatches,
+    with every replica guaranteed ``min_per_replica`` (a replica that
+    gets zero microbatches would idle a whole pipeline).  Raises if the
+    constraints cannot be met (too few microbatches for dp replicas)."""
+    dp = len(throughputs)
+    if dp < 1:
+        raise ValueError("need at least one replica")
+    if any(t <= 0 for t in throughputs):
+        raise ValueError(f"throughputs must be positive: {throughputs}")
+    if total_microbatches % quantum:
+        raise ValueError(f"total_microbatches={total_microbatches} not a "
+                         f"multiple of quantum={quantum}")
+    floor_q = -(-min_per_replica // quantum)      # ceil in quanta
+    units = total_microbatches // quantum
+    if units < dp * floor_q:
+        raise ValueError(
+            f"cannot give {dp} replicas ≥{min_per_replica} microbatches "
+            f"each out of {total_microbatches} (quantum {quantum})")
+    tot_rate = float(sum(throughputs))
+    raw = [units * t / tot_rate for t in throughputs]
+    alloc = [max(floor_q, int(r)) for r in raw]
+    # largest-remainder repair to the exact unit total, never dropping a
+    # replica below the floor
+    while sum(alloc) > units:
+        cands = [i for i in range(dp) if alloc[i] > floor_q]
+        i = min(cands, key=lambda i: raw[i] - alloc[i])
+        alloc[i] -= 1
+    while sum(alloc) < units:
+        i = max(range(dp), key=lambda i: raw[i] - alloc[i])
+        alloc[i] += 1
+    return BatchDomain(tuple(a * quantum for a in alloc),
+                       tuple(float(t) for t in throughputs))
+
+
+def domain_cost(domain: BatchDomain,
+                t_microbatch: Optional[Sequence[float]] = None) -> dict:
+    """Exact pacing terms of a batch domain.
+
+    ``t_microbatch[r]`` is replica r's time per microbatch (defaults to
+    the reciprocal of the domain's throughputs).  Returns the pacing
+    replica's time ``iter_time``, the fluid lower bound ``balanced``,
+    and ``imbalance = iter_time / balanced − 1``."""
+    t = list(t_microbatch) if t_microbatch is not None else \
+        [1.0 / r for r in domain.throughputs]
+    assert len(t) == domain.dp, (len(t), domain.dp)
+    times = [a * ti for a, ti in zip(domain.allocations, t)]
+    iter_time = max(times)
+    balanced = domain.total / sum(1.0 / ti for ti in t)
+    return {
+        "iter_time": iter_time,
+        "pacing_replica": times.index(iter_time),
+        "balanced": balanced,
+        "imbalance": iter_time / balanced - 1.0 if balanced > 0 else 0.0,
+        "replica_times": times,
+    }
+
+
+def check_memory_caps(domain: BatchDomain, act_bytes_per_mb: float,
+                      cap_bytes: Sequence[float], *,
+                      inflight_cap: Optional[int] = None) -> List[bool]:
+    """Per-replica activation-budget check: replica r stashes at most
+    ``min(alloc_r, inflight_cap)`` microbatch activation sets of
+    ``act_bytes_per_mb`` each (the schedule's in-flight bound caps the
+    stash below the full allocation — pass the pipeline's
+    ``schedule.inflight`` peak).  Returns one bool per replica; True
+    means the allocation fits under ``cap_bytes[r]``."""
+    assert len(cap_bytes) == domain.dp, (len(cap_bytes), domain.dp)
+    out = []
+    for a, cap in zip(domain.allocations, cap_bytes):
+        stash = min(a, inflight_cap) if inflight_cap is not None else a
+        out.append(stash * act_bytes_per_mb <= cap)
+    return out

@@ -1,0 +1,194 @@
+"""Bucketed gradient synchronization over the data-parallel axis.
+
+Analytic half — per-bucket byte accounting against the
+``repro.comm.latency`` transports:
+
+* :func:`bucketize` coalesces a gradient pytree's leaves into buckets of
+  ≤ ``bucket_bytes`` (a leaf larger than the budget becomes its own
+  bucket), preserving leaf order so the accounting is deterministic;
+* :func:`sync_time` prices a bucket list under a transport with the ring
+  closed forms — every element crosses the wire ``2(dp−1)/dp`` times in
+  both modes, the difference is the message structure:
+
+      psum            one fused all-reduce over the total:
+                      2(dp−1) · p2p(total/dp)
+      reduce_scatter  per-bucket reduce-scatter + all-gather:
+                      Σ_b 2(dp−1) · p2p(bucket_b/dp)
+
+  so flat psum amortizes per-message latency best, while the bucketed
+  ZeRO-1 mode pays one extra latency per bucket and buys optimizer-state
+  sharding (×1/dp memory — the small-chip enabler the cost model's
+  ``opt_bytes / dp`` term assumes) and bucket-granular overlap.
+
+Runtime half — the collectives the 3-D (dp, pipe, tp) pipeline train
+step executes inside ``shard_map`` (``heteropp``, DESIGN.md §9):
+
+* ``psum`` mode: one ``lax.psum`` over dp per leaf (each member holds
+  its replica's PARTIAL of the global gradient — the loss is already
+  divided by dp); optimizer state stays dp-replicated;
+* ``reduce_scatter`` mode: per-leaf ``lax.psum_scatter`` on a
+  :func:`zero1_scatter_dim`, shard-local AdamW update, and one
+  ``lax.all_gather`` to rebuild the bf16 params — optimizer state lives
+  dp-SHARDED on the scatter dim (leaves with no dp-divisible dim fall
+  back to the replicated path).  Each parameter leaf is its own sync
+  message; :func:`bucketize` is the accounting view of the same traffic.
+
+Both modes perform the same sums in the same order, so they agree
+bitwise up to reduction associativity (validated to ≈1e-8 in
+``tests/helpers/run_spmd_dp_pipeline.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+GRAD_SYNC_MODES = ("psum", "reduce_scatter")
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradBuckets:
+    """Deterministic bucket assignment of gradient leaves.
+
+    ``buckets[i]`` is a list of (leaf_name, nbytes); per-bucket byte
+    totals are exact (no padding modeled — ring chunks are fractional)."""
+    buckets: Tuple[Tuple[Tuple[str, int], ...], ...]
+    bucket_bytes: int
+
+    @property
+    def sizes(self) -> List[int]:
+        return [sum(nb for _, nb in b) for b in self.buckets]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+
+def bucketize(leaf_bytes: Sequence[Tuple[str, int]],
+              bucket_bytes: int = 25 * 2 ** 20) -> GradBuckets:
+    """Greedy in-order coalescing of (name, nbytes) leaves into buckets
+    of at most ``bucket_bytes`` each; an oversized leaf gets a bucket of
+    its own (never split — one collective per bucket)."""
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive: {bucket_bytes}")
+    buckets: List[List[Tuple[str, int]]] = []
+    cur: List[Tuple[str, int]] = []
+    cur_sz = 0
+    for name, nb in leaf_bytes:
+        if nb < 0:
+            raise ValueError(f"negative leaf size {name}: {nb}")
+        if cur and cur_sz + nb > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_sz = [], 0
+        cur.append((name, nb))
+        cur_sz += nb
+        if cur_sz >= bucket_bytes:
+            buckets.append(cur)
+            cur, cur_sz = [], 0
+    if cur:
+        buckets.append(cur)
+    return GradBuckets(tuple(tuple(b) for b in buckets), bucket_bytes)
+
+
+def tree_leaf_bytes(tree: PyTree) -> List[Tuple[str, int]]:
+    """(path, nbytes) per leaf of an (abstract) array pytree, in
+    deterministic flatten order — the input :func:`bucketize` expects."""
+    import jax
+    import numpy as np
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+            if leaf.shape else leaf.dtype.itemsize
+        out.append((path, nbytes))
+    return out
+
+
+def sync_time(buckets: GradBuckets, dp: int, transport: str = "device_rdma",
+              mode: str = "reduce_scatter") -> Dict[str, Any]:
+    """Closed-form sync cost of a bucket list over a dp ring.
+
+    Returns total seconds, per-bucket seconds, and the per-member wire
+    bytes (2(dp−1)/dp of the gradient volume in both modes)."""
+    from ...comm.latency import p2p_latency
+    if mode not in GRAD_SYNC_MODES:
+        raise ValueError(f"mode {mode!r} not in {GRAD_SYNC_MODES}")
+    if dp < 1:
+        raise ValueError(f"dp must be >= 1: {dp}")
+    total = buckets.total_bytes
+    wire = 2 * (dp - 1) * total / dp if dp > 1 else 0.0
+    if dp == 1:
+        return {"total": 0.0, "per_bucket": [0.0] * buckets.num_buckets,
+                "wire_bytes": 0.0, "messages": 0}
+    if mode == "psum":
+        # one fused message; per-bucket attribution is bytes-proportional
+        # so the list shape matches the reduce_scatter branch
+        t = 2 * (dp - 1) * p2p_latency(transport, total / dp)
+        per = [t * sz / total if total else 0.0 for sz in buckets.sizes]
+        return {"total": t, "per_bucket": per, "wire_bytes": wire,
+                "messages": 2 * (dp - 1)}
+    per = [2 * (dp - 1) * p2p_latency(transport, sz / dp)
+           for sz in buckets.sizes]
+    return {"total": sum(per), "per_bucket": per, "wire_bytes": wire,
+            "messages": 2 * (dp - 1) * buckets.num_buckets}
+
+
+# ---------------------------------------------------------------------------
+# runtime helpers (used inside heteropp's dp train step, under shard_map)
+# ---------------------------------------------------------------------------
+
+def zero1_scatter_dim(local_shape: Tuple[int, ...], dp: int,
+                      taken_dims: Sequence[int] = ()) -> Optional[int]:
+    """ZeRO-1 shard dim for one leaf: the first dim of the device-LOCAL
+    shape divisible by dp (and not already carrying another mesh axis);
+    None falls back to the replicated (whole-leaf psum) path."""
+    for i, s in enumerate(local_shape):
+        if i in taken_dims:
+            continue
+        if s >= dp and s % dp == 0:
+            return i
+    return None
+
+
+def spec_axes(spec) -> set:
+    """Mesh axes a PartitionSpec names (flattening tuple entries)."""
+    named = set()
+    for s in spec:
+        if s is None:
+            continue
+        named |= set(s) if isinstance(s, (tuple, list)) else {s}
+    return named
+
+
+def replica_grad_norm(grads: PyTree, specs: PyTree,
+                      axis_sizes: Dict[str, int]):
+    """Global gradient norm computed INSIDE a shard_map replica.
+
+    ``specs`` mirrors ``grads`` with each leaf's PartitionSpec over the
+    replica's manual axes (``axis_sizes``: name → size).  A leaf
+    replicated over an axis contributes identical squares on each of its
+    members, so its local square-sum is divided by the replication
+    factor before the cross-member psum — the psum then counts every
+    distinct shard exactly once and every replicated leaf exactly once.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec
+    axes = tuple(axis_sizes)
+    sq = jnp.float32(0)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    for g, spec in zip(jax.tree.leaves(grads), spec_leaves):
+        named = spec_axes(spec)
+        r = 1
+        for a, n in axis_sizes.items():
+            if a not in named:
+                r *= n
+        sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32))) / r
+    return jnp.sqrt(jax.lax.psum(sq, axes))

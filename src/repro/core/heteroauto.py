@@ -71,10 +71,14 @@ def _tp_candidates(group: ChipGroup, dp: int) -> List[int]:
 
 
 def _dp_candidates(groups: Sequence[ChipGroup], batch_seqs: int,
-                   max_dp: int = 64) -> List[int]:
+                   max_dp: int = 64, *, uneven_dp: bool = False
+                   ) -> List[int]:
     cands = []
     for dp in range(1, min(batch_seqs, max_dp) + 1):
-        if batch_seqs % dp:
+        # with uneven_dp the batch-domain partitioner rounds a
+        # non-dividing batch into per-replica allocations (the cost
+        # model charges the pacing max); chips must still divide
+        if batch_seqs % dp and not uneven_dp:
             continue
         # feasibility probe per group over its OWN power-of-two TP range
         # (a fixed (1..16) list silently dropped dp values for chips with
@@ -97,7 +101,7 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
            two_stage: bool = True,
            subgroup: int = 128, allow_offload: bool = False,
            monotone_tp: bool = True, dp_candidates: Optional[List[int]] = None,
-           ) -> SearchResult:
+           uneven_dp: bool = False) -> SearchResult:
     """DFS over (dp, tp_i, recompute_i) × schedule.
 
     ``alpha``    — legacy: override the bubble coefficient directly
@@ -109,11 +113,20 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
                    terms don't depend on the schedule), so later ones are
                    skipped; offload is only considered if NO schedule fits
                    without it.
+    ``uneven_dp``— also consider dp degrees that do NOT divide the
+                   global batch: the ``dataparallel.batch_domain``
+                   partitioner rounds the batch into per-replica
+                   allocations and the plan carries the resulting
+                   ``batch_domain``; the §4.3.2 max charges the pacing
+                   replica's allocation, so the domain's imbalance is
+                   priced exactly.  Such plans stay cost-model-only
+                   (``from_plan(execute_dp=True)`` refuses them).
     """
     t0 = time.perf_counter()
     batch_seqs = gbs_tokens // seq_len
     groups = _ordered(groups)
-    dps = dp_candidates or _dp_candidates(groups, batch_seqs)
+    dps = dp_candidates or _dp_candidates(groups, batch_seqs,
+                                          uneven_dp=uneven_dp)
 
     if schedule is not None:
         scheds = [get_schedule(schedule)]
@@ -131,8 +144,15 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
         sharded = assign_layers(stages, cfg, seq_len, cfg.num_layers)
         if sharded is None:
             return
-        b = batch_seqs // dp
-        base = ParallelPlan(sharded, dp, b)
+        if batch_seqs % dp == 0:
+            b, domain = batch_seqs // dp, None
+        else:
+            # identical replicas -> uniform throughputs; the partitioner
+            # spreads the remainder and the pacing max prices it
+            from .dataparallel.batch_domain import partition
+            dom = partition(batch_seqs, [1.0] * dp)
+            b, domain = dom.max_allocation, dom.allocations
+        base = ParallelPlan(sharded, dp, b, batch_domain=domain)
         usable = [s for s in scheds if s.supports(base.total_pp, b)]
         picked = None
         for sched in usable:                       # ascending α: first

@@ -8,9 +8,10 @@ schedule/runtime contract):
   the tick-level schedule studies.
 
 * ``spmd`` path    — ``jax.shard_map`` manual over the ``pipe`` axis (and,
-  when ``PipelineSpec.tensor_parallel > 1``, a second manual ``tp`` axis:
-  a 2-D ``(pipe, tp)`` mesh — DESIGN.md §8): every device runs the
-  same program; per-stage *data* (padded stacked layer weights) differs.
+  when ``PipelineSpec.tensor_parallel > 1``, a second manual ``tp`` axis;
+  when ``PipelineSpec.data_parallel > 1``, a third manual ``dp`` axis: up
+  to a 3-D ``(dp, pipe, tp)`` mesh — DESIGN.md §8–§9): every device runs
+  the same program; per-stage *data* (padded stacked layer weights) differs.
   Each pipe ROW holds ONE physical stage — ``n_chunks`` (v) chunk
   slots of layers for virtual-stage schedules, stacked ``(S, v, Lcmax,
   ...)``; single-chunk specs keep the flat ``(S, Lmax, ...)`` layout.
@@ -19,6 +20,12 @@ schedule/runtime contract):
   row-parallel) and ``_stage_forward`` closes each sub-block with a
   ``psum`` over tp, so activations re-enter the pipe stream replicated
   and the tick-synchronous ppermute keeps moving along pipe rows only.
+  The dp axis replicates the whole (pipe × tp) pipeline: each dp member
+  runs its own microbatches (the batch domain — uniform allocations
+  only, ``repro.core.dataparallel``), no collective touches dp during
+  the tick scan, and gradients close with ONE bucketed dp sync
+  (``grad_sync``: flat psum, or ZeRO-1 reduce-scatter + all-gather with
+  dp-sharded optimizer state) before the optimizer step.
   Microbatches stream through a tick-synchronous scan whose static
   tick→(microbatch, chunk, route) program is derived from the plan's
   ``repro.core.schedules`` Schedule by :func:`spmd_tick_tables`:
@@ -67,7 +74,10 @@ class PipelineSpec:
     interleaved, V-shaped for zb_v).  ``recompute`` stays per PHYSICAL
     stage.  ``tensor_parallel`` is the UNIFORM tp degree realized inside
     each pipe row on the 2-D ``(pipe, tp)`` mesh (DESIGN.md §8); 1 keeps
-    the 1-D pipe mesh."""
+    the 1-D pipe mesh.  ``data_parallel`` replicates the whole
+    (pipe × tp) pipeline over a leading ``dp`` mesh axis (DESIGN.md §9):
+    ``microbatches`` is the PER-REPLICA allocation b (uniform batch
+    domains only — the global batch is dp·b microbatches)."""
     num_stages: int
     layers_per_stage: Tuple[int, ...]     # per global chunk-stage
     microbatches: int
@@ -77,10 +87,13 @@ class PipelineSpec:
     n_chunks: int = 1                     # virtual stages per device (v)
     tensor_parallel: int = 1              # uniform tp inside each pipe row
     tp_axis: str = "tp"
+    data_parallel: int = 1                # pipeline replicas over dp
+    dp_axis: str = "dp"
 
     def __post_init__(self):
         assert len(self.layers_per_stage) == self.num_stages * self.n_chunks
         assert self.tensor_parallel >= 1, self.tensor_parallel
+        assert self.data_parallel >= 1, self.data_parallel
         if not self.recompute:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
@@ -96,7 +109,8 @@ class PipelineSpec:
 
 
 def from_plan(plan, microbatches: Optional[int] = None, *,
-              execute_tp: bool = False) -> PipelineSpec:
+              execute_tp: bool = False,
+              execute_dp: bool = False) -> PipelineSpec:
     """Build a runtime PipelineSpec from a HeteroAuto ParallelPlan.
 
     For chunked schedules (``interleaved``, ``zb_v``) each physical
@@ -109,9 +123,19 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
     realizes it on the runtime's 2-D ``(pipe, tp)`` mesh.  Only UNIFORM
     tp is executable — the SPMD runtime runs one program on one mesh
     shape, so a plan whose stages disagree on tp is refused with a clear
-    error and stays a cost-model artifact (DESIGN.md §8).  The default
-    keeps the historical behaviour: tp remains a cost-model dimension and
-    the runtime executes the layer split alone."""
+    error and stays a cost-model artifact (DESIGN.md §8).
+
+    ``execute_dp=True`` consumes the plan's dp degree and realizes it as
+    pipeline replicas over the 3-D mesh's leading ``dp`` axis.  Only
+    UNIFORM batch domains are executable — one SPMD program runs the
+    same tick count on every replica, so a plan carrying a non-uniform
+    ``batch_domain`` (throughput-proportional allocations from
+    ``repro.core.dataparallel.batch_domain``) is refused with a clear
+    error and stays a cost-model artifact (DESIGN.md §9).
+
+    The defaults keep the historical behaviour: tp and dp remain
+    cost-model dimensions and the runtime executes the layer split
+    alone."""
     from .schedules import get_schedule
     sched = get_schedule(plan.schedule)
     v = sched.n_chunks
@@ -127,6 +151,19 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
                 f"— re-search with uniform tp or call from_plan with "
                 f"execute_tp=False")
         tp = tps[0]
+    dp = 1
+    if execute_dp:
+        domain = getattr(plan, "batch_domain", None)
+        if domain is not None and len(set(domain)) > 1:
+            raise ValueError(
+                f"plan carries a non-uniform batch domain "
+                f"{list(domain)} ({plan.describe()}); the SPMD runtime "
+                f"runs ONE tick program on every dp replica, so "
+                f"throughput-proportional batch allocations stay a "
+                f"cost-model dimension (DESIGN.md §9) — re-search with a "
+                f"dp that divides the batch or call from_plan with "
+                f"execute_dp=False")
+        dp = plan.dp
     phys, rec = [], []
     for s in plan.stages:
         per = s.layers_per_stage
@@ -139,7 +176,7 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
     return PipelineSpec(len(phys), chunk_layer_counts(phys, sched),
                         microbatches or plan.microbatches,
                         tuple(rec), schedule=plan.schedule, n_chunks=v,
-                        tensor_parallel=tp)
+                        tensor_parallel=tp, data_parallel=dp)
 
 
 def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
@@ -467,22 +504,19 @@ def schedule_injection_order(schedule, num_stages: int, microbatches: int
     return inj
 
 
-def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
-                            *, remat: bool = True,
-                            schedule: Optional[str] = None):
-    """Returns loss_fn(stage_params, mask, tokens) -> scalar loss, where
-    inside ``shard_map`` each pipe-axis ROW holds ONE physical stage
-    (v chunk slots of layers for chunked schedules).  With
-    ``spec.tensor_parallel > 1`` the mesh is 2-D ``(pipe, tp)`` and both
-    axes are manual: the tp members of a row share the stage Megatron-
-    style (DESIGN.md §8) while activations stream along pipe rows only.
+def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
+                           *, remat: bool = True,
+                           schedule: Optional[str] = None):
+    """Shared builder for the SPMD pipeline: validates the spec against
+    the mesh and returns ``(replica_fn, in_specs, manual, out_axes)``.
 
-    tokens: (b, mb_size, S_seq) — b microbatches, streamed through the
-    schedule's static tick program (:func:`spmd_tick_tables`): per tick
-    each member runs one chunk-forward on the microbatch the tables name,
-    reading its input from a fresh embedding, a ±1 pipe neighbor, or its
-    own previous output (the zb_v turn).
-    """
+    ``replica_fn(stage_params, mask, tokens)`` runs INSIDE shard_map and
+    returns the replica's un-normalized ``(loss_sum, denom, aux_sum)``
+    — each shape (1,), psum'd over the pipe axis so every member of one
+    (pipe × tp) replica holds the same values; nothing touches the dp
+    axis, so dp replicas stay independent until the caller closes them
+    (the loss path psums them, the train step syncs gradients —
+    DESIGN.md §9)."""
     kind = M._block_kind(cfg)
     axis = spec.pipe_axis
     nstages = spec.num_stages
@@ -503,6 +537,15 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         raise ValueError(
             f"mesh axis {spec.tp_axis!r} has size "
             f"{mesh.shape[spec.tp_axis]} but spec.tensor_parallel={tp}")
+    dp = spec.data_parallel
+    if dp > 1 and spec.dp_axis not in mesh.axis_names:
+        raise ValueError(
+            f"spec.data_parallel={dp} needs a {spec.dp_axis!r} mesh "
+            f"axis; got axes {mesh.axis_names}")
+    if spec.dp_axis in mesh.axis_names and mesh.shape[spec.dp_axis] != dp:
+        raise ValueError(
+            f"mesh axis {spec.dp_axis!r} has size "
+            f"{mesh.shape[spec.dp_axis]} but spec.data_parallel={dp}")
     lcfg = _tp_local_cfg(cfg, tp)
     from .schedules import get_schedule
     sched = get_schedule(schedule or spec.schedule)
@@ -537,7 +580,7 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
           jnp.asarray(tables.src), jnp.asarray(tables.active),
           jnp.asarray(tables.emit))
 
-    def stage_loss(stage_params, mask, tokens):
+    def replica_fn(stage_params, mask, tokens):
         # Inside shard_map: leading stage dim is local (size 1) -> squeeze.
         blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
         mask_dev = mask[0]           # (Lmax,) or (v, Lcmax)
@@ -619,7 +662,7 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         loss_sum = jax.lax.psum(loss_sum, axis)
         denom = jax.lax.psum(denom, axis)
         aux_sum = jax.lax.psum(aux_sum, axis) / nstages
-        return loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+        return loss_sum, denom, aux_sum
 
     aps = abstract_stage_params(cfg, spec)
     from ..sharding import rules
@@ -633,20 +676,60 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
             "final_norm": jax.tree.map(lambda _: P(), aps["final_norm"]),
         },
         P(axis),
-        P(),
+        P(spec.dp_axis) if dp > 1 else P(),
     )
-    # manual over the pipe (and, when present, tp) axis; any other mesh
-    # axes stay GSPMD-automatic
-    manual = {axis} | ({spec.tp_axis} & set(mesh.axis_names))
-    out_axes = tuple(a for a in (axis, spec.tp_axis)
+    # manual over the pipe (and, when present, dp/tp) axes; any other
+    # mesh axes stay GSPMD-automatic
+    manual = {axis} | ({spec.tp_axis, spec.dp_axis} & set(mesh.axis_names))
+    out_axes = tuple(a for a in (spec.dp_axis, axis, spec.tp_axis)
                      if a in mesh.axis_names)
+    return replica_fn, in_specs, manual, out_axes
+
+
+def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
+                            *, remat: bool = True,
+                            schedule: Optional[str] = None):
+    """Returns loss_fn(stage_params, mask, tokens) -> scalar loss, where
+    inside ``shard_map`` each pipe-axis ROW holds ONE physical stage
+    (v chunk slots of layers for chunked schedules).  With
+    ``spec.tensor_parallel > 1`` the mesh grows a manual ``tp`` axis (the
+    tp members of a row share the stage Megatron-style — DESIGN.md §8);
+    with ``spec.data_parallel > 1`` a manual ``dp`` axis replicates the
+    whole pipeline and shards the microbatch dim of ``tokens``
+    (DESIGN.md §9).
+
+    tokens: (dp·b, mb_size, S_seq) — b microbatches per dp replica,
+    streamed through the schedule's static tick program
+    (:func:`spmd_tick_tables`): per tick each member runs one
+    chunk-forward on the microbatch the tables name, reading its input
+    from a fresh embedding, a ±1 pipe neighbor, or its own previous
+    output (the zb_v turn).  The loss is the GLOBAL batch mean: CE sums
+    and token counts are psum'd over dp before the division.
+    """
+    replica_fn, in_specs, manual, out_axes = _pipeline_replica_core(
+        cfg, spec, mesh, remat=remat, schedule=schedule)
+    dp, dpax, b = spec.data_parallel, spec.dp_axis, spec.microbatches
+
+    def stage_loss(stage_params, mask, tokens):
+        loss_sum, denom, aux_sum = replica_fn(stage_params, mask, tokens)
+        if dp > 1:
+            loss_sum = jax.lax.psum(loss_sum, dpax)
+            denom = jax.lax.psum(denom, dpax)
+            aux_sum = jax.lax.psum(aux_sum, dpax) / dp
+        return loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+
     from .jax_compat import shard_map
     smapped = shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
                         out_specs=P(out_axes), manual_axes=manual)
 
     def loss_fn(stage_params, mask, tokens):
-        # (S·tp,) identical per-member copies -> scalar (mean keeps the
-        # cotangent uniform across members; each carries 1/(S·tp) of it)
+        # (dp·S·tp,) identical per-member copies -> scalar (mean keeps
+        # the cotangent uniform across members; each carries 1/n of it)
+        if dp > 1 and tokens.shape[0] != dp * b:
+            raise ValueError(
+                f"tokens carry {tokens.shape[0]} microbatches but "
+                f"data_parallel={dp} × microbatches={b} needs {dp * b} "
+                f"(uniform batch domain — DESIGN.md §9)")
         return jnp.mean(smapped(stage_params, mask, tokens))
 
     return loss_fn
@@ -654,8 +737,29 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
 def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
                                   mesh: Mesh, opt_cfg=None, *, remat=True,
-                                  schedule: Optional[str] = None):
+                                  schedule: Optional[str] = None,
+                                  grad_sync: str = "reduce_scatter"):
+    """Training step for the SPMD pipeline.
+
+    With ``spec.data_parallel == 1`` this is autodiff through the
+    pipeline loss plus a replicated AdamW update (``grad_sync`` is
+    irrelevant — there is no dp axis to sync over).  With dp > 1 the
+    WHOLE step runs inside one shard_map manual over (dp, pipe, tp):
+    per-replica gradients close with an explicit bucketed dp sync
+    (``repro.core.dataparallel.grad_sync``) before the optimizer —
+    ``grad_sync="psum"`` keeps optimizer state dp-replicated,
+    ``"reduce_scatter"`` (the default, matching
+    ``cost_model.evaluate``'s ``dp_sync`` memory model and the paper's
+    ZeRO-1-by-default setup) shards it over dp (DESIGN.md §9).
+    """
     opt_cfg = opt_cfg or adamw.AdamWConfig()
+    from .dataparallel.grad_sync import GRAD_SYNC_MODES
+    if grad_sync not in GRAD_SYNC_MODES:
+        raise ValueError(f"grad_sync {grad_sync!r} not in "
+                         f"{GRAD_SYNC_MODES}")
+    if spec.data_parallel > 1:
+        return _make_dp_train_step(cfg, spec, mesh, opt_cfg, remat=remat,
+                                   schedule=schedule, grad_sync=grad_sync)
     loss_fn = make_spmd_pipeline_loss(cfg, spec, mesh, remat=remat,
                                       schedule=schedule)
 
@@ -666,6 +770,158 @@ def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
         new_params, new_opt, om = adamw.apply_update(
             opt_cfg, opt_state, grads, step, params)
         return (new_params, new_opt, step + 1), {"loss": loss, **om}
+
+    return train_step
+
+
+def _make_dp_train_step(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
+                        opt_cfg, *, remat: bool, schedule: Optional[str],
+                        grad_sync: str):
+    """The dp > 1 train step: ONE shard_map manual over (dp, pipe, tp)
+    wrapping loss, backward, dp gradient sync, and the optimizer
+    (DESIGN.md §9).
+
+    Inside the body every value is device-local, so
+    ``jax.value_and_grad`` of the replica loss yields per-member
+    cotangents.  Two corrections rebuild the true global gradient:
+
+    * the replica loss is divided by the replica's member count S·tp
+      before grad — each member seeds a cotangent of 1 into ITS copy of
+      the (psum-broadcast) loss, and those seeds all flow back through
+      the same psum, so the raw per-member gradient is S·tp× the true
+      one (this is the in-body mirror of the dp=1 path's outer
+      ``jnp.mean`` over member copies);
+    * leaves REPLICATED over a replica axis (tp-replicated norm scales,
+      the pipe-replicated embed/final norm) get their gradients psum'd
+      over the missing axes afterwards — each copy only accumulated the
+      cotangent of its own partial use, and summing the copies is
+      exactly what shard_map's replication transpose does at the
+      boundary in the dp=1 path.
+
+    The loss is the GLOBAL batch mean (CE sums and token counts psum
+    over dp BEFORE the division — the same objective as the loss path),
+    so each member's raw gradient is its replica's PARTIAL of the global
+    gradient and the dp sync that closes it is a plain sum: ``psum``
+    mode is one psum per leaf (optimizer state dp-replicated),
+    ``reduce_scatter`` mode is a per-leaf ``psum_scatter`` on a
+    :func:`~repro.core.dataparallel.grad_sync.zero1_scatter_dim`, a
+    shard-local AdamW update on dp-SHARDED (master, m, v), and one
+    ``all_gather`` to rebuild the bf16 params — ZeRO-1 with ×1/dp
+    optimizer memory.  Both modes perform identical sums, so they agree
+    to reduction tolerance (validated in
+    ``tests/helpers/run_spmd_dp_pipeline.py``)."""
+    from .dataparallel import grad_sync as GS
+    replica_fn, in_specs, manual, out_axes = _pipeline_replica_core(
+        cfg, spec, mesh, remat=remat, schedule=schedule)
+    param_specs, mask_spec, tok_spec = in_specs
+    dp, dpax = spec.data_parallel, spec.dp_axis
+    S, tp, b = spec.num_stages, spec.tensor_parallel, spec.microbatches
+    nmem = S * tp
+    axis_sizes = {spec.pipe_axis: S}
+    if tp > 1:
+        axis_sizes[spec.tp_axis] = tp
+    axis_sizes_dp = dict(axis_sizes, **{dpax: dp})
+
+    aps = abstract_stage_params(cfg, spec)
+    msizes = dict(mesh.shape)
+
+    def _local_shape(leaf, pspec):
+        shape = list(leaf.shape)
+        for i, ax in enumerate(pspec):
+            if ax is None:
+                continue
+            for a in ((ax,) if isinstance(ax, str) else tuple(ax)):
+                shape[i] //= msizes.get(a, 1)
+        return tuple(shape)
+
+    if grad_sync == "reduce_scatter":
+        def _sdim(leaf, pspec):
+            taken = [i for i, ax in enumerate(pspec) if ax is not None]
+            return GS.zero1_scatter_dim(_local_shape(leaf, pspec), dp,
+                                        taken)
+        scatter_dims = jax.tree.map(_sdim, aps, param_specs)
+    else:
+        scatter_dims = jax.tree.map(lambda _: None, aps)
+
+    def _with_dp(leaf, pspec, d):
+        parts = list(pspec) + [None] * (leaf.ndim - len(pspec))
+        if d is not None:
+            assert parts[d] is None, (pspec, d)
+            parts[d] = dpax
+        return P(*parts)
+
+    opt_specs = jax.tree.map(_with_dp, aps, param_specs, scatter_dims)
+
+    def step_body(stage_params, opt_state, step, mask, tokens):
+        def scaled_loss(p):
+            # the GLOBAL batch mean: CE sums and token counts cross dp
+            # BEFORE the division (same objective as the loss path — a
+            # per-replica division would silently diverge from it the
+            # moment denom became data-dependent)
+            loss_sum, denom, aux_sum = replica_fn(p, mask, tokens)
+            loss_sum = jax.lax.psum(loss_sum, dpax)
+            denom = jax.lax.psum(denom, dpax)
+            aux_sum = jax.lax.psum(aux_sum, dpax) / dp
+            gl = loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+            return jnp.sum(gl) / (nmem * dp)
+
+        val, grads = jax.value_and_grad(scaled_loss)(stage_params)
+
+        def _fix(g, pspec):
+            missing = tuple(a for a in axis_sizes
+                            if a not in GS.spec_axes(pspec))
+            return jax.lax.psum(g, missing) if missing else g
+
+        grads = jax.tree.map(_fix, grads, param_specs)
+
+        # dp sync: each member holds its replica's PARTIAL of the global
+        # gradient (the loss psums over dp divided every seed by dp), so
+        # the sync is a plain psum — fused per leaf, or scattered into
+        # ZeRO-1 shards
+        def _sync(g, d):
+            if d is None:
+                return jax.lax.psum(g, dpax)
+            return jax.lax.psum_scatter(
+                g, dpax, scatter_dimension=d, tiled=True)
+
+        grads = jax.tree.map(_sync, grads, scatter_dims)
+        gnorm = GS.replica_grad_norm(grads, opt_specs, axis_sizes_dp)
+        new_params, new_opt, om = adamw.apply_update(
+            opt_cfg, opt_state, grads, step, stage_params,
+            grad_norm=gnorm)
+        if grad_sync == "reduce_scatter":
+            def _gather(p_new, d):
+                if d is None:
+                    return p_new
+                return jax.lax.all_gather(p_new, dpax, axis=d, tiled=True)
+            new_params = jax.tree.map(_gather, new_params, scatter_dims)
+        mets = {"loss": jnp.reshape(val * (nmem * dp), (1,)),
+                "grad_norm": jnp.reshape(om["grad_norm"], (1,)),
+                "lr": jnp.reshape(om["lr"], (1,))}
+        return new_params, new_opt, mets
+
+    from .jax_compat import shard_map
+    opt_tree_specs = {"master": opt_specs, "m": opt_specs, "v": opt_specs}
+    met_specs = {"loss": P(out_axes), "grad_norm": P(out_axes),
+                 "lr": P(out_axes)}
+    smapped = shard_map(
+        step_body, mesh=mesh,
+        in_specs=(param_specs, opt_tree_specs, P(), mask_spec, tok_spec),
+        out_specs=(param_specs, opt_tree_specs, met_specs),
+        manual_axes=manual)
+
+    def train_step(state, mask, batch):
+        params, opt_state, step = state
+        tokens = batch["tokens"]
+        if tokens.shape[0] != dp * b:
+            raise ValueError(
+                f"tokens carry {tokens.shape[0]} microbatches but "
+                f"data_parallel={dp} × microbatches={b} needs {dp * b} "
+                f"(uniform batch domain — DESIGN.md §9)")
+        new_p, new_opt, mets = smapped(params, opt_state, step, mask,
+                                       tokens)
+        return ((new_p, new_opt, step + 1),
+                {k: jnp.mean(v) for k, v in mets.items()})
 
     return train_step
 

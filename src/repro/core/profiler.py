@@ -151,7 +151,15 @@ def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3
 
     This is what the auto-profiler runs per chip type on a real cluster; on
     CPU it is only used by tests (shape of the data, not absolute numbers).
-    """
+
+    Besides the combined backward, dgrad (∂loss/∂input) and wgrad
+    (∂loss/∂params) are timed SEPARATELY, giving a measured
+    ``wgrad_frac = t_wgrad / (t_dgrad + t_wgrad)`` — the wall-clock
+    counterpart of the analytic op-mix split the backward-split
+    schedules (zb_h1/zb_v) consume.  ``plan_to_schedule_inputs``
+    prefers a measured fraction over the analytic one when given
+    (ROADMAP item: measured per-stage wgrad fractions on real
+    hardware)."""
     import jax
     import jax.numpy as jnp
     from ..models import transformer as tfm
@@ -165,16 +173,26 @@ def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3
 
     fwd = jax.jit(lambda p, x: tfm.block_forward(
         p, small, x, "dense" if not small.is_moe else "moe")[0])
-    fwd(blk, x).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fwd(blk, x).block_until_ready()
-    t_fwd = (time.perf_counter() - t0) / iters
 
-    grad = jax.jit(jax.grad(lambda p, x: fwd(p, x).astype(jnp.float32).sum()))
-    grad(blk, x)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(grad(blk, x))
-    t_bwd = (time.perf_counter() - t0) / iters
-    return {"t_fwd": t_fwd, "t_bwd": t_bwd, "t_recomp": t_fwd}
+    def timed(fn, *args):
+        jax.block_until_ready(fn(*args))          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / iters
+
+    t_fwd = timed(fwd, blk, x)
+    loss = lambda p, x: fwd(p, x).astype(jnp.float32).sum()
+    t_bwd = timed(jax.jit(jax.grad(loss, argnums=(0, 1))), blk, x)
+    t_dgrad = timed(jax.jit(jax.grad(loss, argnums=1)), blk, x)
+    # wgrad time is the FULL backward minus the dgrad-only pass — a
+    # params-only grad still executes the whole cotangent chain through
+    # the block (XLA can only drop the final input-grad step), so timing
+    # it directly would count nearly all of dgrad again and bias the
+    # fraction high.  Clamped: CPU timing noise can push the difference
+    # slightly past either end.
+    t_wgrad = max(t_bwd - t_dgrad, 0.0)
+    frac = t_wgrad / t_bwd if t_bwd > 0 else 0.5
+    return {"t_fwd": t_fwd, "t_bwd": t_bwd, "t_recomp": t_fwd,
+            "t_dgrad": t_dgrad, "t_wgrad": t_wgrad,
+            "wgrad_frac": min(max(frac, 0.05), 0.95)}

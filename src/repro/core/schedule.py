@@ -42,7 +42,8 @@ def simulate_gpipe(t_fwd, t_bwd, microbatches, t_p2p, *, overlap=True,
 # ---------------------------------------------------------------------------
 
 def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
-                            transport="device_rdma", resharding="sr_ag"):
+                            transport="device_rdma", resharding="sr_ag",
+                            measured=None):
     """Expand a ParallelPlan into per-STAGE fwd/bwd/p2p times plus the
     per-stage dgrad/wgrad decomposition.
 
@@ -54,23 +55,32 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
     get different fractions.  Backward-split schedules (``zb_h1``,
     ``zb_v``) consume it inside the simulator; single-``B`` schedules
     ignore it.
+
+    ``measured`` maps chip names to wall-clock profiles from
+    :func:`~repro.core.profiler.measure_layer_profile` — when a chip's
+    entry carries a ``wgrad_frac``, the MEASURED fraction is preferred
+    over the analytic op-mix split for that chip's stages (the real-
+    hardware path of the auto-profiler API).
     """
     from .cost_model import stage_profiles
     from .resharding import boundary_time
     from ..comm.latency import p2p_latency
 
     profs = stage_profiles(plan, cfg, seq_len)
+    measured = measured or {}
     t_fwd, t_bwd, t_upd, wfrac, tps, specs = [], [], [], [], [], []
     from .profiler import update_time
     for s, prof in zip(plan.stages, profs):
         lps = s.layers_per_stage
+        meas = measured.get(s.group.spec.name, {})
+        wf = meas.get("wgrad_frac", prof.wgrad_frac)
         for _ in range(s.pp):
             f = lps * (prof.t_fwd + (prof.t_recomp if s.recompute else 0.0))
             bwd = lps * prof.t_bwd
             t_fwd.append(f)
             t_bwd.append(bwd)
             t_upd.append(update_time(s.group.spec, cfg, s.tp, plan.dp, lps))
-            wfrac.append(prof.wgrad_frac)
+            wfrac.append(wf)
             tps.append(s.tp)
             specs.append(s.group.spec)
     act_bytes = seq_len * cfg.d_model * 2       # one microbatch boundary act
@@ -93,12 +103,16 @@ def simulate_plan(plan, cfg, seq_len: int, *,
                   schedule: Optional[ScheduleLike] = None,
                   transport="device_rdma", resharding="sr_ag",
                   overlap: bool = True,
-                  wgrad_frac: Optional[float] = None) -> SimResult:
+                  wgrad_frac: Optional[float] = None,
+                  measured=None) -> SimResult:
     """Replay a HeteroAuto plan through its (or the given) schedule.
     ``wgrad_frac=None`` (default) uses the profiler's analytic per-stage
-    dgrad/wgrad split; pass a float to override globally."""
+    dgrad/wgrad split — or, per chip, a wall-clock measured fraction
+    when ``measured`` (chip name → ``measure_layer_profile`` dict)
+    provides one; pass a float to override globally."""
     sched = get_schedule(schedule if schedule is not None else plan.schedule)
     tf, tb, b, tp2p, tu, wf = plan_to_schedule_inputs(
-        plan, cfg, seq_len, transport=transport, resharding=resharding)
+        plan, cfg, seq_len, transport=transport, resharding=resharding,
+        measured=measured)
     return simulate(sched, tf, tb, b, tp2p, overlap=overlap, t_update=tu,
                     wgrad_frac=wf if wgrad_frac is None else wgrad_frac)

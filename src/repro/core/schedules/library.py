@@ -6,6 +6,7 @@
 | ``1f1b``      | 1                    | min(b, S−k)                        |
 | ``zb_h1``     | (f+d)/(f+d+w) = 2/3  | min(b, S−k)                        |
 | ``interleaved``| 1/v                 | min(2(S−k−1) + (v−1)S + 1, v·b)/v  |
+| ``interleaved3``| 1/v (v=3)          | same closed form at v=3            |
 | ``zb_v``      | f/(v(f+d+w)) = 1/6   | min(b, S) (flat)                   |
 
 (f, d, w are the canonical unit times, full backward = dgrad + wgrad =
@@ -344,4 +345,9 @@ register(GPipe())
 register(OneFOneB())
 register(ZBH1())
 register(Interleaved1F1B(2))
+# v=3 virtual stages: α = 1/3 between interleaved (1/2) and zb_v (1/6),
+# at a higher warmup stash (closed forms are v-generic; the conformance
+# harness in tests/test_schedule_conformance.py covers it like any other
+# registry entry, and the runtime executes it via the same tick tables)
+register(Interleaved1F1B(3))
 register(ZBV())

@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1p5_0p5b \
         --steps 100 --batch 8 --seq 256 [--model-parallel 1] [--accum 1] \
-        [--pipeline-parallel 4 --tensor-parallel 2 --schedule 1f1b \
-         --microbatches 4] \
+        [--pipeline-parallel 4 --tensor-parallel 2 --data-parallel 2 \
+         --schedule 1f1b --microbatches 4 --grad-sync reduce_scatter] \
         [--plan plan.json | --search A:2,B:2] \
         [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
 
@@ -11,18 +11,23 @@ Uses whatever devices exist (CPU/TPU); on a real TPU fleet the same flags
 drive the production mesh.  ``--smoke`` selects the reduced config family.
 ``--pipeline-parallel N`` switches to the shard_map HeteroPP pipeline over
 N devices; ``--schedule`` picks the pipeline schedule (see
-``repro.core.schedules``) — chunked schedules (``interleaved``, ``zb_v``)
-run with v chunk slots per device via the schedule-derived tick tables.
-``--tensor-parallel N`` adds a second manual mesh axis: each stage is
-sharded Megatron-style over N tp members of a 2-D ``(pipe, tp)`` mesh
-(DESIGN.md §8).  ``--plan plan.json`` executes a saved HeteroAuto
-``ParallelPlan`` (see ``examples/hetero_search.py --save-plan``) through
-``heteropp.from_plan`` — schedule, non-uniform layer split AND the
-plan's (uniform) tp included; ``--search A:2,B:2`` runs the HeteroAuto
-search on the given chip cluster first and executes the winner the same
-way (pp·tp must fit the available devices; plans with NON-uniform
-per-stage tp are refused — asymmetric intra-stage parallelism stays a
-cost-model dimension; dp likewise).
+``repro.core.schedules``) — chunked schedules (``interleaved``,
+``interleaved3``, ``zb_v``) run with v chunk slots per device via the
+schedule-derived tick tables.  ``--tensor-parallel N`` adds a manual tp
+mesh axis: each stage is sharded Megatron-style over N tp members
+(DESIGN.md §8).  ``--data-parallel N`` adds a leading manual dp axis:
+N pipeline replicas each stream their own microbatches and close
+gradients with the ``--grad-sync`` mode (flat psum, or ZeRO-1
+reduce-scatter + all-gather with dp-sharded optimizer state —
+DESIGN.md §9) on the up-to-3-D ``(dp, pipe, tp)`` mesh.  ``--plan
+plan.json`` executes a saved HeteroAuto ``ParallelPlan`` (see
+``examples/hetero_search.py --save-plan``) through ``heteropp.from_plan``
+— schedule, non-uniform layer split AND the plan's (uniform) tp and dp
+included; ``--search A:2,B:2`` runs the HeteroAuto search on the given
+chip cluster first and executes the winner the same way (dp·pp·tp must
+fit the available devices; plans with NON-uniform per-stage tp or a
+non-uniform batch domain are refused — asymmetric parallelism stays a
+cost-model dimension).
 """
 from __future__ import annotations
 
@@ -53,7 +58,7 @@ def _pipeline_spec(args, cfg):
     if args.plan and args.search:
         raise SystemExit("--plan and --search are mutually exclusive")
     if args.plan or args.search:
-        # the plan carries schedule, stage count AND tp; conflicting
+        # the plan carries schedule, stage count, tp AND dp; conflicting
         # explicit flags would be silently ignored — refuse instead
         src = "--plan" if args.plan else "--search"
         if args.schedule is not None:
@@ -66,11 +71,16 @@ def _pipeline_spec(args, cfg):
             raise SystemExit(f"{src} sets tp from the plan (uniform plans "
                              f"execute it on the (pipe, tp) mesh); drop "
                              f"--tensor-parallel {args.tensor_parallel}")
+        if args.data_parallel:
+            raise SystemExit(f"{src} sets dp from the plan (uniform batch "
+                             f"domains execute on the (dp, pipe, tp) "
+                             f"mesh); drop --data-parallel "
+                             f"{args.data_parallel}")
 
     def _from_plan(plan):
         try:
             spec = HP.from_plan(plan, microbatches=mb or None,
-                                execute_tp=True)
+                                execute_tp=True, execute_dp=True)
             HP.validate_tensor_parallel(cfg, spec.tensor_parallel)
             return spec
         except (ValueError, NotImplementedError) as e:
@@ -80,7 +90,10 @@ def _pipeline_spec(args, cfg):
         import json
         from ..core.cost_model import ParallelPlan
         with open(args.plan) as f:
-            plan = ParallelPlan.from_dict(json.load(f))
+            try:
+                plan = ParallelPlan.from_dict(json.load(f))
+            except (KeyError, ValueError) as e:
+                raise SystemExit(f"--plan {args.plan}: {e}") from None
         print(f"plan [{args.plan}]: {plan.describe()}")
         return _from_plan(plan)
     if args.search:
@@ -100,6 +113,7 @@ def _pipeline_spec(args, cfg):
     from ..core.schedules import get_schedule
     pp = args.pipeline_parallel
     tp = args.tensor_parallel or 1
+    dp = args.data_parallel or 1
     try:
         HP.validate_tensor_parallel(cfg, tp)
     except (ValueError, NotImplementedError) as e:
@@ -109,46 +123,50 @@ def _pipeline_spec(args, cfg):
     phys = [base + (1 if i < rem else 0) for i in range(pp)]
     return HP.PipelineSpec(pp, HP.chunk_layer_counts(phys, sched),
                            microbatches=mb or pp, schedule=sched.name,
-                           n_chunks=sched.n_chunks, tensor_parallel=tp)
+                           n_chunks=sched.n_chunks, tensor_parallel=tp,
+                           data_parallel=dp)
 
 
 def run_pipeline(args, cfg):
     """shard_map pipeline training: one physical stage (v chunk slots of
-    layers for chunked schedules) per pipe-axis member."""
+    layers for chunked schedules) per pipe-axis member; dp replicates
+    the whole pipeline over a leading mesh axis (DESIGN.md §9)."""
     from jax.sharding import Mesh
     from ..core import heteropp as HP
     from ..optim import adamw
 
     devices = jax.devices()
     spec = _pipeline_spec(args, cfg)
-    pp, tp = spec.num_stages, spec.tensor_parallel
-    if len(devices) < pp * tp:
-        raise SystemExit(f"pipeline needs ≥{pp}·{tp}={pp * tp} devices "
+    pp, tp, dp = spec.num_stages, spec.tensor_parallel, spec.data_parallel
+    need = dp * pp * tp
+    if len(devices) < need:
+        raise SystemExit(f"pipeline needs ≥{dp}·{pp}·{tp}={need} devices "
                          f"(have {len(devices)})")
-    if tp > 1:
-        mesh = Mesh(np.array(devices[:pp * tp]).reshape(pp, tp),
-                    ("pipe", "tp"))
-    else:
-        mesh = Mesh(np.array(devices[:pp]), ("pipe",))
+    sizes = [("dp", dp), ("pipe", pp), ("tp", tp)]
+    sizes = [(a, n) for a, n in sizes if n > 1 or a == "pipe"]
+    mesh = Mesh(np.array(devices[:need]).reshape([n for _, n in sizes]),
+                tuple(a for a, _ in sizes))
 
     mb = spec.microbatches
-    if args.batch % mb:
+    total_mb = dp * mb                   # global batch in microbatches
+    if args.batch % total_mb:
         raise SystemExit(f"--batch {args.batch} not divisible by "
-                         f"microbatches {mb}")
+                         f"dp·microbatches = {dp}·{mb} = {total_mb}")
     if spec.total_layers != cfg.num_layers:
         raise SystemExit(f"plan covers {spec.total_layers} layers but "
                          f"{cfg.name} has {cfg.num_layers}")
-    print(f"pipeline: stages={pp} tp={tp} v={spec.n_chunks} "
+    print(f"pipeline: stages={pp} tp={tp} dp={dp} v={spec.n_chunks} "
           f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
-          f"schedule={spec.schedule}")
+          f"schedule={spec.schedule}"
+          + (f" grad_sync={args.grad_sync}" if dp > 1 else ""))
 
     from ..models import model as M
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     stage_params, mask = HP.split_stage_params(params, cfg, spec)
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 5))
-    step_fn = jax.jit(HP.make_spmd_pipeline_train_step(cfg, spec, mesh,
-                                                       opt))
+    step_fn = jax.jit(HP.make_spmd_pipeline_train_step(
+        cfg, spec, mesh, opt, grad_sync=args.grad_sync))
     state = (stage_params, adamw.init_opt_state(stage_params),
              jnp.int32(0))
 
@@ -159,11 +177,12 @@ def run_pipeline(args, cfg):
     t0 = time.perf_counter()
     for i in range(args.steps):
         batch = next(loader)
-        toks = batch["tokens"].reshape(mb, args.batch // mb, args.seq)
+        toks = batch["tokens"].reshape(total_mb, args.batch // total_mb,
+                                       args.seq)
         state, m = step_fn(state, mask, {"tokens": toks})
         if (i + 1) % args.log_every == 0 or i == 0:
             dt = time.perf_counter() - t0
-            tgs = tokens_per_step * (i + 1) / dt / (pp * tp)
+            tgs = tokens_per_step * (i + 1) / dt / need
             print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
                   f"TGS={tgs:.0f}", flush=True)
     loader.close()
@@ -185,6 +204,18 @@ def main():
                          "over N tp members on a 2-D (pipe, tp) mesh "
                          "(default 1; saved/searched plans carry their "
                          "own tp and refuse this flag)")
+    ap.add_argument("--data-parallel", type=int, default=0,
+                    help="with --pipeline-parallel: run N pipeline "
+                         "replicas over a leading dp mesh axis, each "
+                         "streaming its share of the microbatches "
+                         "(default 1; saved/searched plans carry their "
+                         "own dp and refuse this flag)")
+    ap.add_argument("--grad-sync", default="reduce_scatter",
+                    choices=["psum", "reduce_scatter"],
+                    help="with --data-parallel: dp gradient sync mode — "
+                         "flat psum (replicated optimizer state) or "
+                         "ZeRO-1 reduce-scatter + all-gather "
+                         "(dp-sharded optimizer state; default)")
     ap.add_argument("--schedule", default=None,
                     choices=available_schedules(),
                     help="pipeline schedule (with --pipeline-parallel; "
@@ -221,6 +252,14 @@ def main():
             f"--tensor-parallel {args.tensor_parallel} only applies to the "
             f"shard_map pipeline; add --pipeline-parallel N (or use "
             f"--model-parallel for GSPMD tensor parallelism)")
+    if args.data_parallel:
+        # likewise: the GSPMD path shards the batch on its own rules and
+        # would silently ignore an explicit dp degree — refuse instead
+        raise SystemExit(
+            f"--data-parallel {args.data_parallel} only applies to the "
+            f"shard_map pipeline; add --pipeline-parallel N (the GSPMD "
+            f"path data-parallelizes over the mesh's data axes by "
+            f"itself)")
 
     mesh = make_local_mesh(model=args.model_parallel)
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,

@@ -54,11 +54,16 @@ def global_norm(tree: PyTree):
 
 
 def apply_update(opt_cfg: AdamWConfig, opt_state: PyTree, grads: PyTree,
-                 step, params: PyTree) -> tuple[PyTree, PyTree, dict]:
+                 step, params: PyTree, *,
+                 grad_norm=None) -> tuple[PyTree, PyTree, dict]:
     """Returns (new params (model dtype), new opt_state, metrics).
 
-    ``params`` is only used as the dtype reference for the bf16 cast."""
-    gnorm = global_norm(grads)
+    ``params`` is only used as the dtype reference for the bf16 cast.
+    ``grad_norm`` overrides the locally computed global norm for the
+    clip scale — callers running inside ``shard_map`` (the HeteroPP dp
+    train step) pass the cross-device norm, since the local leaves there
+    are shards/replicas whose naive norm would be wrong."""
+    gnorm = global_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9)) \
         if opt_cfg.grad_clip > 0 else 1.0
     lr = lr_at(opt_cfg, step)

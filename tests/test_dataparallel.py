@@ -1,0 +1,358 @@
+"""repro.core.dataparallel: the heterogeneous batch-domain partitioner,
+bucketed grad-sync byte accounting, the dp modes of heteropp.from_plan /
+heteroauto.search / cost_model.evaluate, the measured dgrad/wgrad
+profiler split, the launcher's --data-parallel refusal, and the 8-device
+(dp × pipe × tp) SPMD e2e helper (DESIGN.md §9)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.comm.latency import p2p_latency
+from repro.core import chips
+from repro.core.cost_model import ParallelPlan, StagePlan, evaluate
+from repro.core.dataparallel import (GradBuckets, bucketize,
+                                     check_memory_caps, domain_cost,
+                                     partition, sync_time,
+                                     zero1_scatter_dim)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# batch-domain partitioner
+# ---------------------------------------------------------------------------
+
+def test_partition_exact_proportional_split():
+    dom = partition(12, [1.0, 2.0, 3.0])
+    assert dom.allocations == (2, 4, 6)
+    assert dom.uniform is False and dom.total == 12
+    assert dom.max_allocation == 6
+
+
+def test_partition_uniform_and_remainder():
+    assert partition(8, [1.0] * 4).allocations == (2, 2, 2, 2)
+    dom = partition(6, [1.0] * 4)          # identical replicas, 6 % 4 != 0
+    assert sorted(dom.allocations) == [1, 1, 2, 2]
+    assert dom.total == 6 and not dom.uniform
+
+
+def test_partition_quantum_and_floor():
+    dom = partition(12, [1.0, 5.0], quantum=2)
+    assert dom.total == 12
+    assert all(a % 2 == 0 for a in dom.allocations)
+    assert min(dom.allocations) >= 2       # min_per_replica=1, quantum 2
+    with pytest.raises(ValueError):
+        partition(3, [1.0, 1.0], quantum=2)      # not a quantum multiple
+    with pytest.raises(ValueError):
+        partition(2, [1.0, 1.0, 1.0])            # fewer mbs than replicas
+    with pytest.raises(ValueError):
+        partition(4, [1.0, 0.0])                 # non-positive throughput
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=64),
+       st.sampled_from([(1.0,), (1.0, 2.0), (0.5, 1.0, 4.0),
+                        (3.0, 2.0, 1.0, 1.0)]))
+def test_partition_properties(dp_scale, extra, rates):
+    """Sum preserved, floor respected, and the rounding never strays
+    more than one microbatch from the exact proportional share."""
+    dp = len(rates)
+    total = dp * dp_scale + extra
+    dom = partition(total, rates)
+    assert dom.total == total and dom.dp == dp
+    assert min(dom.allocations) >= 1
+    tot_rate = sum(rates)
+    for a, r in zip(dom.allocations, rates):
+        raw = total * r / tot_rate
+        assert a >= 1 and abs(a - raw) < 1.0 + 1e-9 or a == 1, \
+            (dom.allocations, raw)
+
+
+def test_domain_cost_closed_forms():
+    # proportional allocations on 2:1 throughputs -> perfectly balanced
+    dom = partition(9, [2.0, 1.0])
+    c = domain_cost(dom)
+    assert c["iter_time"] == pytest.approx(3.0)      # (6·0.5, 3·1.0)
+    assert c["imbalance"] == pytest.approx(0.0)
+    # a UNIFORM domain on the same replicas pays the slow replica
+    uni = dataclasses.replace(dom, allocations=(4, 5))
+    cu = domain_cost(uni)
+    assert cu["iter_time"] == pytest.approx(5.0)     # pacing: 5·1.0
+    assert cu["pacing_replica"] == 1
+    assert cu["imbalance"] == pytest.approx(5.0 / 3.0 - 1.0)
+
+
+def test_check_memory_caps():
+    dom = partition(6, [1.0, 2.0])
+    ok = check_memory_caps(dom, act_bytes_per_mb=1.0, cap_bytes=[1.5, 4.0])
+    assert ok == [False, True]             # 2 sets > 1.5, 4 sets <= 4
+    ok = check_memory_caps(dom, 1.0, [1.5, 4.0], inflight_cap=1)
+    assert ok == [True, True]              # schedule stash cap binds first
+
+
+# ---------------------------------------------------------------------------
+# grad-sync bucket accounting
+# ---------------------------------------------------------------------------
+
+def test_bucketize_invariants():
+    leaves = [("a", 10), ("b", 20), ("c", 5), ("d", 100), ("e", 1)]
+    gb = bucketize(leaves, bucket_bytes=30)
+    assert gb.total_bytes == 136
+    assert [n for b in gb.buckets for n, _ in b] == list("abcde")  # order
+    for sz, bucket in zip(gb.sizes, gb.buckets):
+        assert sz <= 30 or len(bucket) == 1  # only a lone leaf overflows
+    with pytest.raises(ValueError):
+        bucketize(leaves, bucket_bytes=0)
+    with pytest.raises(ValueError):
+        bucketize([("x", -1)], bucket_bytes=8)
+
+
+@settings(max_examples=30)
+@given(st.integers(min_value=1, max_value=200),
+       st.sampled_from([(3, 7, 11), (64, 64, 64, 64), (1, 1, 1),
+                        (100, 1, 100, 1)]))
+def test_bucketize_conserves_bytes(bucket_bytes, sizes):
+    leaves = [(f"l{i}", s) for i, s in enumerate(sizes)]
+    gb = bucketize(leaves, bucket_bytes=bucket_bytes)
+    assert gb.total_bytes == sum(sizes)
+    assert sum(len(b) for b in gb.buckets) == len(sizes)
+
+
+def test_sync_time_matches_closed_forms():
+    gb = bucketize([("a", 2 ** 20), ("b", 2 ** 20), ("c", 3 * 2 ** 20)],
+                   bucket_bytes=2 * 2 ** 20)
+    for dp in (2, 4):
+        for transport in ("device_rdma", "cpu_tcp"):
+            rs = sync_time(gb, dp, transport, "reduce_scatter")
+            want = sum(2 * (dp - 1) * p2p_latency(transport, sz / dp)
+                       for sz in gb.sizes)
+            assert rs["total"] == pytest.approx(want)
+            assert rs["messages"] == 2 * (dp - 1) * gb.num_buckets
+            ps = sync_time(gb, dp, transport, "psum")
+            assert ps["total"] == pytest.approx(
+                2 * (dp - 1) * p2p_latency(transport, gb.total_bytes / dp))
+            # same wire bytes, different message structure: flat psum
+            # amortizes per-message latency best
+            assert ps["wire_bytes"] == pytest.approx(rs["wire_bytes"])
+            assert ps["total"] <= rs["total"] + 1e-12
+    z = sync_time(gb, 1, "device_rdma", "psum")
+    assert z["total"] == 0.0 and z["wire_bytes"] == 0.0
+    with pytest.raises(ValueError):
+        sync_time(gb, 2, "device_rdma", "allgather")
+
+
+def test_zero1_scatter_dim():
+    assert zero1_scatter_dim((1, 4, 8), 2) == 1
+    assert zero1_scatter_dim((1, 4, 8), 2, taken_dims=(1,)) == 2
+    assert zero1_scatter_dim((1, 3, 5), 2) is None
+    assert zero1_scatter_dim((6,), 3) == 0
+
+
+def test_stage_param_buckets_cover_tree():
+    """Bucket accounting over a REAL stage-parameter tree: every leaf
+    lands in exactly one bucket and the bytes add up."""
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core import heteropp as HP
+    from repro.core.dataparallel.grad_sync import tree_leaf_bytes
+
+    cfg = get_smoke_config("granite_8b")
+    spec = HP.PipelineSpec(2, (1, 1), microbatches=2)
+    aps = HP.abstract_stage_params(cfg, spec)
+    leaves = tree_leaf_bytes(aps)
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(aps))
+    gb = bucketize(leaves, bucket_bytes=64 * 1024)
+    assert gb.total_bytes == total
+    assert sum(len(b) for b in gb.buckets) == len(jax.tree.leaves(aps))
+
+
+# ---------------------------------------------------------------------------
+# plan / cost-model / search integration
+# ---------------------------------------------------------------------------
+
+def _plan(dp=2, b=4, domain=None, schedule="1f1b"):
+    g = lambda n, c: chips.ChipGroup(chips.CHIPS[n], c)
+    return ParallelPlan([StagePlan(g("A", 4), 2, 1, 1, False),
+                         StagePlan(g("B", 4), 2, 1, 1, False)],
+                        dp=dp, microbatches=b, schedule=schedule,
+                        batch_domain=domain)
+
+
+def test_from_plan_dp_modes():
+    """from_plan: dp stays a cost-model dimension by default; with
+    execute_dp=True a uniform plan sets spec.data_parallel and a
+    non-uniform batch domain is refused with a clear error."""
+    from repro.core import heteropp as HP
+    uni = _plan()
+    assert HP.from_plan(uni).data_parallel == 1
+    spec = HP.from_plan(uni, execute_dp=True)
+    assert spec.data_parallel == 2 and spec.microbatches == 4
+    spec = HP.from_plan(uni, execute_tp=True, execute_dp=True)
+    assert spec.tensor_parallel == 2 and spec.data_parallel == 2
+    hetero = _plan(dp=2, b=5, domain=(5, 3))
+    assert HP.from_plan(hetero).data_parallel == 1    # legacy path intact
+    with pytest.raises(ValueError, match="non-uniform batch domain"):
+        HP.from_plan(hetero, execute_dp=True)
+    # a uniform EXPLICIT domain is executable (it IS the uniform split)
+    assert HP.from_plan(_plan(domain=(4, 4)),
+                        execute_dp=True).data_parallel == 2
+
+
+def test_plan_json_roundtrip_preserves_batch_domain():
+    import json
+    p = _plan(dp=2, b=5, domain=(5, 3))
+    p2 = ParallelPlan.from_dict(json.loads(json.dumps(p.to_dict())))
+    assert p2.batch_domain == (5, 3)
+    assert p2.batch_seqs == 8 and p.describe() == p2.describe()
+    assert ParallelPlan.from_dict(
+        json.loads(json.dumps(_plan().to_dict()))).batch_domain is None
+
+
+def test_evaluate_dp_sync_memory_modes():
+    """ZeRO-1 (reduce_scatter) shards optimizer state ×1/dp; the flat
+    psum sync replicates it — strictly more memory per stage at dp>1."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("granite_8b")
+    plan = _plan(dp=4, b=4)
+    rs = evaluate(plan, cfg, 128, 4 * 128 * 4)
+    ps = evaluate(plan, cfg, 128, 4 * 128 * 4, dp_sync="psum")
+    assert rs.dp_sync == "reduce_scatter" and ps.dp_sync == "psum"
+    for m_rs, m_ps in zip(rs.stage_mem_gb, ps.stage_mem_gb):
+        assert m_ps > m_rs
+    with pytest.raises(ValueError, match="dp_sync"):
+        evaluate(plan, cfg, 128, 4 * 128 * 4, dp_sync="allreduce")
+
+
+def test_search_uneven_dp_carries_batch_domain():
+    """With uneven_dp the search may pick a dp that does not divide the
+    batch: the plan carries the rounded batch domain and the cost model
+    charges the pacing max allocation."""
+    from repro.configs import get_smoke_config
+    from repro.core import heteroauto
+    cfg = get_smoke_config("granite_8b")
+    groups = chips.cluster(("A", 4))
+    seq = 128
+    r = heteroauto.search(groups, cfg, 6 * seq, seq, two_stage=False,
+                          dp_candidates=[4], uneven_dp=True)
+    assert r.plan is not None and r.plan.dp == 4
+    assert r.plan.batch_domain is not None
+    assert sorted(r.plan.batch_domain) == [1, 1, 2, 2]
+    assert r.plan.microbatches == 2 == max(r.plan.batch_domain)
+    assert r.plan.batch_seqs == 6
+    # and the runtime refuses to execute the non-uniform domain
+    from repro.core import heteropp as HP
+    with pytest.raises(ValueError, match="non-uniform batch domain"):
+        HP.from_plan(r.plan, execute_dp=True)
+
+
+def test_search_divisible_dp_stays_uniform():
+    from repro.configs import get_smoke_config
+    from repro.core import heteroauto
+    cfg = get_smoke_config("granite_8b")
+    groups = chips.cluster(("A", 4))
+    seq = 128
+    r = heteroauto.search(groups, cfg, 8 * seq, seq, two_stage=False,
+                          dp_candidates=[4], uneven_dp=True)
+    assert r.plan is not None and r.plan.dp == 4
+    assert r.plan.batch_domain is None and r.plan.microbatches == 2
+
+
+# ---------------------------------------------------------------------------
+# measured dgrad/wgrad satellite
+# ---------------------------------------------------------------------------
+
+def test_measure_layer_profile_times_dgrad_wgrad():
+    from repro.configs import get_smoke_config
+    from repro.core.profiler import measure_layer_profile
+    prof = measure_layer_profile(get_smoke_config("granite_8b"), 64,
+                                 iters=1)
+    for k in ("t_fwd", "t_bwd", "t_recomp", "t_dgrad", "wgrad_frac"):
+        assert k in prof and prof[k] > 0, (k, prof)
+    assert prof["t_wgrad"] >= 0.0        # t_bwd − t_dgrad; noise-clamped
+    assert 0.0 < prof["wgrad_frac"] < 1.0
+
+
+def test_plan_to_schedule_inputs_prefers_measured_wgrad():
+    from repro.configs import get_smoke_config
+    from repro.core.schedule import plan_to_schedule_inputs
+    cfg = get_smoke_config("granite_8b")
+    plan = _plan()
+    *_, wf_analytic = plan_to_schedule_inputs(plan, cfg, 128)
+    assert all(0.0 < w < 1.0 for w in wf_analytic)
+    measured = {"A": {"wgrad_frac": 0.25, "t_fwd": 1e-3}}
+    *_, wf = plan_to_schedule_inputs(plan, cfg, 128, measured=measured)
+    assert wf[0] == 0.25                       # chip A: measured wins
+    assert wf[1] == wf_analytic[1]             # chip B: analytic kept
+
+
+# ---------------------------------------------------------------------------
+# launcher refusal + SPMD e2e (subprocess; forced virtual devices)
+# ---------------------------------------------------------------------------
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    return env
+
+
+def test_train_refuses_data_parallel_without_pipeline():
+    """--data-parallel without a pipeline path must refuse loudly
+    instead of silently ignoring the flag (mirrors the PR 3
+    --tensor-parallel refusal)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "qwen1p5_0p5b", "--smoke", "--data-parallel", "2", "--steps", "1"],
+        capture_output=True, text=True, timeout=600, env=_env(), cwd=ROOT)
+    assert r.returncode != 0
+    assert "--data-parallel 2 only applies" in r.stderr, r.stderr[-800:]
+    assert "--pipeline-parallel" in r.stderr
+
+
+def test_spmd_dp_pipeline_subprocess():
+    """3-D (dp × pipe × tp) pipeline on 8 virtual devices: dp=2 matches
+    the dp=1 pipeline and the monolithic model; both grad-sync modes
+    agree; uniform-dp plans execute, non-uniform batch domains are
+    refused (DESIGN.md §9)."""
+    script = os.path.join(ROOT, "tests", "helpers",
+                          "run_spmd_dp_pipeline.py")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=600, env=_env(), cwd=ROOT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "DP_OK" in r.stdout
+
+
+@pytest.mark.skipif(
+    len(__import__("jax").devices()) < 8,
+    reason="needs ≥8 devices (CI runs an 8-device job)")
+def test_spmd_dp_pipeline_in_process():
+    """The 3-D mesh path on the REAL process devices (exercised by the
+    8-virtual-device CI job; skipped on a 1-device laptop run)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core import heteropp as HP
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 2, 16), 0,
+                                cfg.vocab_size)
+    mesh = jax.make_mesh((2, 2, 2), ("dp", "pipe", "tp"))
+    spec = HP.PipelineSpec(2, (1, 1), microbatches=2, tensor_parallel=2,
+                           data_parallel=2)
+    sp, mask = HP.split_stage_params(params, cfg, spec)
+    loss = float(HP.make_spmd_pipeline_loss(cfg, spec, mesh)(
+        sp, mask, tokens))
+    refs = [float(M.loss_fn(params, cfg, {"tokens": tokens[i]},
+                            remat=False)[0]) for i in range(4)]
+    ref = float(np.mean(refs))
+    assert abs(loss - ref) / max(abs(ref), 1e-9) < 2e-3, (loss, ref)
