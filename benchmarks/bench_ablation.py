@@ -75,6 +75,36 @@ def main(argv=None):
         emit(f"table9.schedule.{name}", f"{run(schedule=name) / full:.1%}",
              f"relative makespan vs {args.schedule} reference")
 
+    # grad-sync overlap ablation (DESIGN.md §10): replay the plan with
+    # explicit per-bucket dp sync events — the exposed tail is the part
+    # of the sync the schedule cannot hide under its wgrad wave; the
+    # legacy column is the pre-§10 constant-overlap heuristic.  These
+    # rows land in BENCH_ablation.json via benchmarks/run.py.
+    ov_plan = plan if plan.dp > 1 else dataclasses.replace(plan, dp=4)
+    ov_whatif = "" if plan.dp > 1 else f" (what-if dp={ov_plan.dp})"
+    for name in ("1f1b", "zb_h1", "zb_v", "wave"):
+        if not get_schedule(name).supports(ov_plan.total_pp,
+                                           ov_plan.microbatches):
+            emit(f"table_overlap.{name}", "n/a",
+                 f"unsupported for S={ov_plan.total_pp} "
+                 f"b={ov_plan.microbatches}")
+            continue
+        ov = SCH.simulate_plan(ov_plan, cfg, 4096, schedule=name,
+                               grad_sync=True)
+        legacy = SCH.simulate_plan(ov_plan, cfg, 4096, schedule=name)
+        emit(f"table_overlap.{name}",
+             f"{max(ov.exposed_sync) * 1e3:.1f}ms",
+             f"exposed dp-sync tail; overlap-aware makespan "
+             f"{ov.makespan:.2f}s vs legacy-heuristic {legacy.makespan:.2f}s"
+             f"{ov_whatif}")
+    for mode in ("psum", "reduce_scatter"):
+        ov = SCH.simulate_plan(ov_plan, cfg, 4096, grad_sync=True,
+                               sync_mode=mode)
+        emit(f"table_overlap.mode.{mode}",
+             f"{max(ov.exposed_sync) * 1e3:.1f}ms",
+             f"exposed tail under {mode} bucket structure, "
+             f"schedule={ov_plan.schedule}{ov_whatif}")
+
     # uniform 1F1B: what a homogeneous-style framework would do on the same
     # chips — ONE tp everywhere, equal layers per stage, uniform recompute
     dp = plan.dp

@@ -115,7 +115,15 @@ def sync_time(buckets: GradBuckets, dp: int, transport: str = "device_rdma",
     """Closed-form sync cost of a bucket list over a dp ring.
 
     Returns total seconds, per-bucket seconds, and the per-member wire
-    bytes (2(dp−1)/dp of the gradient volume in both modes)."""
+    bytes (2(dp−1)/dp of the gradient volume in both modes).
+
+    The ``psum`` figure is the fully-fused idealization (one message
+    per ring round).  The runtime's bucketed psum
+    (``heteropp._bucketed_dp_psum``) issues one all-reduce per bucket,
+    which adds 2(dp−1)·(num_buckets−1) per-message setups over this
+    model — sub-percent of the total at the default bucket sizes
+    (25 MiB ⇒ ≥ MiB-scale messages), and inside the tolerance the
+    overlap validation allows (DESIGN.md §10)."""
     from ...comm.latency import p2p_latency
     if mode not in GRAD_SYNC_MODES:
         raise ValueError(f"mode {mode!r} not in {GRAD_SYNC_MODES}")
@@ -182,9 +190,18 @@ def replica_grad_norm(grads: PyTree, specs: PyTree,
     from jax.sharding import PartitionSpec
     axes = tuple(axis_sizes)
     sq = jnp.float32(0)
+    grad_leaves = jax.tree.leaves(grads)
     spec_leaves = jax.tree.leaves(
         specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
-    for g, spec in zip(jax.tree.leaves(grads), spec_leaves):
+    # a mismatched specs tree would silently zip-truncate and DROP
+    # gradient leaves from the global norm — refuse instead
+    if len(grad_leaves) != len(spec_leaves):
+        raise ValueError(
+            f"replica_grad_norm: grads have {len(grad_leaves)} leaves "
+            f"but specs have {len(spec_leaves)} — the spec tree must "
+            f"mirror the gradient tree leaf-for-leaf, otherwise leaves "
+            f"fall out of the global grad norm")
+    for g, spec in zip(grad_leaves, spec_leaves):
         named = spec_axes(spec)
         r = 1
         for a, n in axis_sizes.items():

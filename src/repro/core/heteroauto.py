@@ -30,18 +30,38 @@ import time
 from typing import List, Optional, Sequence, Tuple
 
 from .chips import ChipGroup
-from .cost_model import (ParallelPlan, PlanCost, StagePlan, assign_layers,
-                         evaluate)
+from .cost_model import (DEFAULT_BUCKET_BYTES, ParallelPlan, PlanCost,
+                         StagePlan, assign_layers, evaluate)
 from .schedules import ScheduleLike, get_schedule
 from ..models.config import ModelConfig
 
-# default schedule candidates, visited in ascending-α order: ZB-V
-# (α=1/6, flat min(b,S) memory) > interleaved (α=1/2, warmup-heavy
-# memory, needs b % S == 0) > ZB-H1 (α=2/3 at 1F1B memory) > 1F1B (the
-# fallback for exotic (S, b) shapes).  All four now execute for real on
-# the SPMD runtime (heteropp.spmd_tick_tables), and every candidate has
-# closed-form α AND inflight, so each evaluate stays O(1).
-DEFAULT_SCHEDULES: Tuple[str, ...] = ("zb_v", "interleaved", "zb_h1", "1f1b")
+# default schedule candidates, visited in ascending-α order: wave
+# (α=1/12, flat min(b,S) memory) > ZB-V (α=1/6) > interleaved (α=1/2,
+# warmup-heavy memory, needs b % S == 0) > ZB-H1 (α=2/3 at 1F1B
+# memory) > 1F1B (the fallback for exotic (S, b) shapes).  All five
+# execute for real on the SPMD runtime (heteropp.spmd_tick_tables),
+# and every candidate has closed-form α, inflight AND wgrad-tail
+# windows, so each evaluate stays O(1).  NOTE: α does NOT order the
+# §10 grad-sync exposure — interleaved's k·S·(d+w)/v drain windows can
+# beat the zig-zags' sub-op windows on slow dp transports — so the
+# first-feasible break below only applies where the schedule enters
+# iter_time through α alone (dp == 1 / legacy heuristic); with the
+# exposure term active every supported candidate is evaluated.
+DEFAULT_SCHEDULES: Tuple[str, ...] = ("wave", "zb_v", "interleaved",
+                                      "zb_h1", "1f1b")
+
+# dp grad-sync search dimensions (DESIGN.md §10): sync mode trades
+# optimizer-state memory (ZeRO-1 ×1/dp) against fused-message latency,
+# bucket size trades per-message latency against drain granularity in
+# the reduce_scatter accounting, and the transport prices the cluster's
+# wire.  Kept deliberately small — the sweep multiplies every dp > 1
+# candidate evaluation, and the ring model makes reduce_scatter cost
+# weakly monotone in bucket size (fewer per-message latencies at equal
+# bytes), so extra default sizes would mostly buy redundant evaluates;
+# pass more ``bucket_sizes`` when the leaf structure makes it matter.
+DEFAULT_SYNC_MODES: Tuple[str, ...] = ("reduce_scatter", "psum")
+DEFAULT_DP_TRANSPORTS: Tuple[str, ...] = ("device_rdma",)
+DEFAULT_BUCKET_SIZES: Tuple[int, ...] = (DEFAULT_BUCKET_BYTES,)
 
 
 @dataclasses.dataclass
@@ -101,8 +121,12 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
            two_stage: bool = True,
            subgroup: int = 128, allow_offload: bool = False,
            monotone_tp: bool = True, dp_candidates: Optional[List[int]] = None,
-           uneven_dp: bool = False) -> SearchResult:
-    """DFS over (dp, tp_i, recompute_i) × schedule.
+           uneven_dp: bool = False,
+           sync_modes: Optional[Sequence[str]] = None,
+           dp_transports: Optional[Sequence[str]] = None,
+           bucket_sizes: Optional[Sequence[int]] = None,
+           sync_overlap: Optional[float] = None) -> SearchResult:
+    """DFS over (dp, tp_i, recompute_i) × schedule × sync config.
 
     ``alpha``    — legacy: override the bubble coefficient directly
                    (plans annotated 1F1B; schedule search disabled).
@@ -121,6 +145,18 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
                    replica's allocation, so the domain's imbalance is
                    priced exactly.  Such plans stay cost-model-only
                    (``from_plan(execute_dp=True)`` refuses them).
+    ``sync_modes`` / ``dp_transports`` / ``bucket_sizes`` — the dp
+                   grad-sync sweep (DESIGN.md §10): every dp > 1
+                   candidate is priced under each (mode, transport,
+                   bucket size) combination through the derived
+                   exposed-sync term, and the winning plan carries its
+                   config (``plan.dp_sync`` etc.).  ``psum`` is one
+                   fused message per chunk, so bucket sizes only
+                   multiply the ``reduce_scatter`` candidates.
+    ``sync_overlap`` — legacy: price grad sync with the old
+                   constant-overlap ``update_time`` heuristic instead
+                   of the derived exposed-sync term (the pre-§10
+                   baseline, kept for A/B tests).
     """
     t0 = time.perf_counter()
     batch_seqs = gbs_tokens // seq_len
@@ -136,8 +172,43 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
         scheds = sorted((get_schedule(s) for s in
                          (schedules or DEFAULT_SCHEDULES)),
                         key=lambda s: s.alpha())
+    sync_modes = tuple(sync_modes or DEFAULT_SYNC_MODES)
+    dp_transports = tuple(dp_transports or DEFAULT_DP_TRANSPORTS)
+    bucket_sizes = tuple(bucket_sizes or DEFAULT_BUCKET_SIZES)
 
     best_plan, best_cost, evaluated = None, None, 0
+    pinned_sync = None       # stage 2 reuses the stage-1 winner's config
+
+    def sync_configs(dp: int):
+        """(dp_sync, dp_transport, bucket_bytes) sweep for one dp."""
+        if dp == 1 or sync_overlap is not None:
+            # nothing to sync / the legacy heuristic prices it flat —
+            # keep the plan defaults (one evaluation, old behaviour)
+            return [("reduce_scatter", "device_rdma",
+                     DEFAULT_BUCKET_BYTES)]
+        if pinned_sync is not None:
+            return [pinned_sync]
+        out = []
+        for mode in sync_modes:
+            for tr in dp_transports:
+                if mode == "psum":
+                    # psum is the mode whose RUNTIME consumes the bucket
+                    # size (heteropp._bucketed_dp_psum) — sweep it,
+                    # largest first: the fused pricing ties across
+                    # sizes, and the executed per-bucket surcharge the
+                    # model idealizes away shrinks with bucket size, so
+                    # ties must resolve to the largest candidate
+                    out.extend((mode, tr, bb)
+                               for bb in sorted(bucket_sizes,
+                                                reverse=True))
+                else:
+                    # ZeRO-1 executes one message per LEAF regardless —
+                    # the bucket list is its fixed accounting
+                    # granularity (from_plan drops the budget), so
+                    # sweeping sizes would rank plans by message
+                    # structures the runtime never runs
+                    out.append((mode, tr, DEFAULT_BUCKET_BYTES))
+        return out
 
     def consider(stages: List[StagePlan], dp: int):
         nonlocal best_plan, best_cost, evaluated
@@ -154,24 +225,46 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
             b, domain = dom.max_allocation, dom.allocations
         base = ParallelPlan(sharded, dp, b, batch_domain=domain)
         usable = [s for s in scheds if s.supports(base.total_pp, b)]
-        picked = None
-        for sched in usable:                       # ascending α: first
-            plan = dataclasses.replace(base, schedule=sched.name)
-            cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
-                            allow_offload=False)
-            evaluated += 1
-            if cost.feasible:                      # feasible wins (pruning)
-                picked = (plan, cost)
-                break
-        if picked is None and allow_offload:
-            for sched in usable:
-                plan = dataclasses.replace(base, schedule=sched.name)
+        cfgs = sync_configs(dp)
+
+        def best_under(sched, offload):
+            nonlocal evaluated
+            picked = None
+            for mode, tr, bb in cfgs:
+                plan = dataclasses.replace(
+                    base, schedule=sched.name, dp_sync=mode,
+                    dp_transport=tr, bucket_bytes=bb)
                 cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
-                                allow_offload=True)
+                                allow_offload=offload,
+                                sync_overlap=sync_overlap)
                 evaluated += 1
                 if cost.feasible and (picked is None
                                       or cost.iter_time < picked[1].iter_time):
                     picked = (plan, cost)
+            return picked
+
+        # ascending-α visit order.  Without the exposure term (dp == 1,
+        # or the legacy flat heuristic) the schedule enters iter_time
+        # through α alone, so the FIRST memory-feasible candidate is
+        # exactly optimal and the rest are skipped.  With the §10
+        # exposed-sync term a higher-α schedule can still win through
+        # larger wgrad-tail windows, so every supported schedule is
+        # evaluated and the best feasible kept.
+        exact_alpha_order = dp == 1 or sync_overlap is not None
+        picked = None
+        for sched in usable:
+            got = best_under(sched, offload=False)
+            if got and (picked is None
+                        or got[1].iter_time < picked[1].iter_time):
+                picked = got
+            if picked is not None and exact_alpha_order:
+                break                              # feasible wins (pruning)
+        if picked is None and allow_offload:
+            for sched in usable:
+                got = best_under(sched, offload=True)
+                if got and (picked is None
+                            or got[1].iter_time < picked[1].iter_time):
+                    picked = got
         if picked is None:
             return
         plan, cost = picked
@@ -208,6 +301,12 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
     # ---------------- stage 2: subgroup refinement under fixed dp ----------
     if two_stage and best_plan is not None:
         dp = best_plan.dp
+        # like dp, the sync config is frozen at the stage-1 winner's:
+        # subgrouping refines the pipeline composition, and re-sweeping
+        # sync per subgroup candidate would multiply the refinement cost
+        # for a dimension that interacts with it only weakly
+        pinned_sync = (best_plan.dp_sync, best_plan.dp_transport,
+                       best_plan.bucket_bytes)
         split: List[ChipGroup] = []
         for g in groups:
             n, i = g.count, 0
@@ -236,11 +335,20 @@ def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
                          seq_len: int, *, alpha: Optional[float] = 1.0,
                          schedule: ScheduleLike = "1f1b",
                          allow_offload: bool = True,
-                         fixed: Optional[dict] = None) -> SearchResult:
+                         fixed: Optional[dict] = None,
+                         sync_overlap: Optional[float] = 0.7) -> SearchResult:
     """Best homogeneous 3D-parallel config for one chip type (or evaluate a
     pinned configuration, e.g. the paper's Table 6 entries).  The default
     alpha=1.0 / 1F1B pairing is what the paper's Table 6 frameworks run;
-    pass ``alpha=None`` with a schedule to re-baseline under another."""
+    pass ``alpha=None`` with a schedule to re-baseline under another.
+
+    ``sync_overlap`` stays at the calibrated 0.7 constant here: the
+    Table 6 numbers are wall-clock measurements of frameworks whose DDP
+    overlaps grad sync per bucket INSIDE the last microbatch's backward
+    — finer than the stage-level bucket-readiness rule of the §10
+    derived term — so the measured overlap fraction is the honest model
+    for them.  Pass ``sync_overlap=None`` to re-baseline under the
+    derived exposed-sync term."""
     t0 = time.perf_counter()
     batch_seqs = gbs_tokens // seq_len
     sched = get_schedule(schedule)
@@ -264,7 +372,8 @@ def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
         st = StagePlan(group, tp, pp, layers=cfg.num_layers, recompute=rec)
         plan = ParallelPlan([st], dp, batch_seqs // dp, schedule=sched.name)
         cost = evaluate(plan, cfg, seq_len, gbs_tokens, alpha=alpha,
-                        allow_offload=allow_offload)
+                        allow_offload=allow_offload,
+                        sync_overlap=sync_overlap)
         evaluated += 1
         if not cost.feasible:
             continue

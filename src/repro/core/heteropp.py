@@ -89,11 +89,19 @@ class PipelineSpec:
     tp_axis: str = "tp"
     data_parallel: int = 1                # pipeline replicas over dp
     dp_axis: str = "dp"
+    # dp grad-sync bucket budget (DESIGN.md §10): with bucket_bytes > 0
+    # the psum sync mode coalesces gradient leaves into fused per-bucket
+    # all-reduces issued in wgrad-completion order (later chunk slots
+    # first — the order the §10 overlap model assumes); 0 keeps the
+    # legacy one-collective-per-leaf program.  ``from_plan`` threads a
+    # searched plan's bucket_bytes here.
+    bucket_bytes: int = 0
 
     def __post_init__(self):
         assert len(self.layers_per_stage) == self.num_stages * self.n_chunks
         assert self.tensor_parallel >= 1, self.tensor_parallel
         assert self.data_parallel >= 1, self.data_parallel
+        assert self.bucket_bytes >= 0, self.bucket_bytes
         if not self.recompute:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
@@ -173,10 +181,15 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
             phys.append(take)
             rec.append(s.recompute)
             left -= take
+    # the bucket budget only shapes the psum sync program (ZeRO-1 keeps
+    # one message per leaf), so thread it only when it will be consulted
+    bucket = getattr(plan, "bucket_bytes", 0) \
+        if dp > 1 and getattr(plan, "dp_sync", "") == "psum" else 0
     return PipelineSpec(len(phys), chunk_layer_counts(phys, sched),
                         microbatches or plan.microbatches,
                         tuple(rec), schedule=plan.schedule, n_chunks=v,
-                        tensor_parallel=tp, data_parallel=dp)
+                        tensor_parallel=tp, data_parallel=dp,
+                        bucket_bytes=bucket)
 
 
 def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
@@ -750,7 +763,11 @@ def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
     ``grad_sync="psum"`` keeps optimizer state dp-replicated,
     ``"reduce_scatter"`` (the default, matching
     ``cost_model.evaluate``'s ``dp_sync`` memory model and the paper's
-    ZeRO-1-by-default setup) shards it over dp (DESIGN.md §9).
+    ZeRO-1-by-default setup) shards it over dp (DESIGN.md §9).  With
+    ``spec.bucket_bytes > 0`` the psum mode issues fused per-bucket
+    all-reduces in wgrad-completion order instead of one collective per
+    leaf — the program the §10 overlap model prices, bit-identical
+    numerics (DESIGN.md §10).
     """
     opt_cfg = opt_cfg or adamw.AdamWConfig()
     from .dataparallel.grad_sync import GRAD_SYNC_MODES
@@ -772,6 +789,85 @@ def make_spmd_pipeline_train_step(cfg: ModelConfig, spec: PipelineSpec,
         return (new_params, new_opt, step + 1), {"loss": loss, **om}
 
     return train_step
+
+
+def _bucketed_dp_psum(grads: PyTree, dp_axis: str, n_chunks: int,
+                      bucket_bytes: int) -> PyTree:
+    """Fused per-bucket dp all-reduces in wgrad-completion order
+    (DESIGN.md §10).
+
+    The gradient stream is ordered the way backward finalizes it: later
+    chunk slots first (a device's higher slot hosts a later global
+    stage, whose backward completes earlier), block leaves in reverse
+    flatten order within a slot, and the pipe-replicated embed/final
+    norm last (their cotangents accumulate across the whole backward).
+    The coalescing itself is ``dataparallel.grad_sync.bucketize`` — the
+    SAME rule the §10 accounting (``exposed_sync_time`` /
+    ``plan_sync_events``) prices, applied per dtype run (a fused psum
+    needs one dtype) — so the executed message structure and the model
+    cannot drift apart.  Element-wise sums are unchanged by the
+    concatenation, so the result is bit-identical to the per-leaf psum
+    program — validated in ``tests/helpers/run_spmd_dp_pipeline.py``."""
+    import jax.numpy as jnp
+    from .dataparallel.grad_sync import bucketize
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    nleaves = len(flat)
+    # (completion-order key, leaf idx, chunk slot or None, array)
+    entries = []
+    for i, (kp, leaf) in enumerate(flat):
+        top = getattr(kp[0], "key", str(kp[0])) if kp else ""
+        if top == "blocks" and n_chunks > 1:
+            for k in range(n_chunks):
+                entries.append(((0, n_chunks - 1 - k, nleaves - i),
+                                i, k, leaf[:, k]))
+        elif top == "blocks":
+            entries.append(((0, 0, nleaves - i), i, None, leaf))
+        else:
+            entries.append(((1, 0, nleaves - i), i, None, leaf))
+    entries.sort(key=lambda e: e[0])
+
+    buckets: List[List[tuple]] = []
+    run: List[tuple] = []          # maximal same-dtype run of the stream
+
+    def flush_run():
+        if not run:
+            return
+        gb = bucketize([(str(j), a.size * a.dtype.itemsize)
+                        for j, (_, _, a) in enumerate(run)], bucket_bytes)
+        for bucket in gb.buckets:
+            buckets.append([run[int(name)] for name, _ in bucket])
+        run.clear()
+
+    for _, i, k, arr in entries:
+        if run and arr.dtype != run[0][2].dtype:
+            flush_run()
+        run.append((i, k, arr))
+    flush_run()
+
+    out: List[Optional[Any]] = [None] * nleaves
+    chunk_parts: Dict[int, List[Optional[Any]]] = {}
+    for bucket in buckets:
+        if len(bucket) == 1:
+            i, k, arr = bucket[0]
+            pieces = [(i, k, jax.lax.psum(arr, dp_axis))]
+        else:
+            fused = jax.lax.psum(
+                jnp.concatenate([a.reshape(-1) for _, _, a in bucket]),
+                dp_axis)
+            sizes = np.cumsum([a.size for _, _, a in bucket][:-1])
+            pieces = [(i, k, part.reshape(a.shape))
+                      for (i, k, a), part in
+                      zip(bucket, jnp.split(fused, sizes))]
+        for i, k, arr in pieces:
+            if k is None:
+                out[i] = arr
+            else:
+                chunk_parts.setdefault(i, [None] * n_chunks)[k] = arr
+    for i, parts in chunk_parts.items():
+        assert all(p is not None for p in parts), (i, parts)
+        out[i] = jnp.stack(parts, axis=1)
+    assert all(o is not None for o in out)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def _make_dp_train_step(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
@@ -876,15 +972,22 @@ def _make_dp_train_step(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
         # dp sync: each member holds its replica's PARTIAL of the global
         # gradient (the loss psums over dp divided every seed by dp), so
-        # the sync is a plain psum — fused per leaf, or scattered into
-        # ZeRO-1 shards
-        def _sync(g, d):
-            if d is None:
-                return jax.lax.psum(g, dpax)
-            return jax.lax.psum_scatter(
-                g, dpax, scatter_dimension=d, tiled=True)
+        # the sync is a plain psum — bucketed fused all-reduces in
+        # wgrad-completion order when spec.bucket_bytes > 0 (the §10
+        # program the overlap model prices), per-leaf psums otherwise,
+        # or per-leaf scatters into ZeRO-1 shards (each leaf stays its
+        # own message there: the scatter dim is leaf-specific)
+        if grad_sync == "psum" and spec.bucket_bytes > 0:
+            grads = _bucketed_dp_psum(grads, dpax, spec.n_chunks,
+                                      spec.bucket_bytes)
+        else:
+            def _sync(g, d):
+                if d is None:
+                    return jax.lax.psum(g, dpax)
+                return jax.lax.psum_scatter(
+                    g, dpax, scatter_dimension=d, tiled=True)
 
-        grads = jax.tree.map(_sync, grads, scatter_dims)
+            grads = jax.tree.map(_sync, grads, scatter_dims)
         gnorm = GS.replica_grad_norm(grads, opt_specs, axis_sizes_dp)
         new_params, new_opt, om = adamw.apply_update(
             opt_cfg, opt_state, grads, step, stage_params,

@@ -121,15 +121,37 @@ def analytic_layer_profile(chip: ChipSpec, cfg: ModelConfig, tp: int,
 
 
 
+OPT_STEP_TIME = 1e-4
+
+
+def optimizer_step_time(chip: ChipSpec) -> float:
+    """Pure per-stage optimizer step (fused AdamW over the local shard —
+    memory-bound, tiny next to a microbatch of compute).  Grad-sync cost
+    is priced SEPARATELY: either by the legacy constant-overlap
+    heuristic (:func:`update_time`) or by the schedule-derived
+    exposed-sync term (``cost_model.evaluate`` /
+    ``schedule.plan_sync_events`` — DESIGN.md §10)."""
+    return OPT_STEP_TIME
+
+
 def update_time(chip: ChipSpec, cfg: ModelConfig, tp: int, dp: int,
                 layers: float, *, overlap: float = 0.7) -> float:
-    """Per-stage optimizer step + the non-overlapped part of grad sync
-    (ZeRO-1 reduce-scatter + all-gather over the DP group crosses nodes)."""
+    """LEGACY: per-stage optimizer step + the non-overlapped part of grad
+    sync behind a fixed ``overlap`` fraction (ZeRO-1 reduce-scatter +
+    all-gather over the DP group crosses nodes).  The hand-waved
+    constant this hides is exactly what the schedule-aware overlap
+    subsystem (DESIGN.md §10) replaces: ``cost_model.evaluate`` now
+    derives the exposed fraction from the schedule's wgrad-tail windows
+    and the per-bucket ``dataparallel.grad_sync`` byte accounting, and
+    only falls back here when called with an explicit
+    ``sync_overlap=`` (e.g. the Table 6 homogeneous baselines, whose
+    measured frameworks overlap sync inside the last backward at finer
+    granularity than the stage-level bucket rule can see)."""
     if dp <= 1:
-        return 1e-4
+        return OPT_STEP_TIME
     grad_bytes = layers * layer_param_count(cfg) * 2 / tp
     sync = 2 * grad_bytes * (dp - 1) / dp / chip.nic_bw
-    return sync * (1.0 - overlap) + 1e-4
+    return sync * (1.0 - overlap) + OPT_STEP_TIME
 
 
 def offload_time(chip: ChipSpec, cfg: ModelConfig, tp: int,

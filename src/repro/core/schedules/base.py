@@ -68,6 +68,7 @@ class Schedule:
 
     def __init__(self):
         self._inflight_cache: Dict[tuple, List[float]] = {}
+        self._tail_cache: Dict[tuple, List[List[float]]] = {}
 
     # ------------------------------------------------------------------ ops
     def ops(self, num_stages: int, microbatches: int) -> List[List[Op]]:
@@ -161,6 +162,54 @@ class Schedule:
                     held -= unit
             out.append(peak)
         return out
+
+    # ------------------------------------------------------------ grad sync
+    def wgrad_tails(self, num_stages: int, microbatches: int
+                    ) -> List[float]:
+        """Closed-form per-chunk-slot wgrad tail windows (canonical
+        units): how long before the stage's final compute op chunk slot
+        k's last weight-gradient completes — the window in which that
+        chunk's gradient buckets drain over the dp transport while the
+        stage is still computing (DESIGN.md §10).  O(1) like ``alpha``/
+        ``inflight`` so ``cost_model.evaluate`` stays O(1) per plan;
+        regression-tested against :meth:`wgrad_tail_profile` (boundary
+        stages may differ by up to one backward op — the tolerance the
+        test allows).  Default: all-zero (single-chunk schedules only
+        finalize their gradients at the very last backward)."""
+        return [0.0] * self.n_chunks
+
+    def wgrad_tail_profile(self, num_stages: int, microbatches: int
+                           ) -> List[List[float]]:
+        """Per physical stage, per chunk slot: the canonical-unit time
+        between the chunk's LAST weight-gradient op (W, or B for
+        single-``B`` schedules) and the stage's final compute op —
+        the window in which that chunk's gradient buckets can drain
+        over the dp transport while the stage is still busy with the
+        rest of its wgrad wave (DESIGN.md §10).
+
+        Derived by replaying the op lists at canonical unit times (like
+        :meth:`derived_alpha`) and cached per (S, b); one unit is
+        (f + d + w) per microbatch per stage, so consumers scale by
+        ``t_stage_per_microbatch / (UNIT_F + UNIT_D + UNIT_W)``.
+        Single-chunk schedules have a single all-zero column (the
+        stage's grads are only final at its very last backward);
+        chunked schedules expose the earlier chunks' windows — the
+        grad-sync overlap the zig-zag placements buy."""
+        key = (num_stages, microbatches)
+        prof = self._tail_cache.get(key)
+        if prof is None:
+            from .simulator import simulate
+            S, b, v = num_stages, microbatches, self.n_chunks
+            f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+            r = simulate(self, [f] * S, [d + w] * S, b, [0.0] * (S - 1),
+                         wgrad_frac=w / (d + w))
+            prof = [[max(0.0, r.stage_end[s]
+                         - r.grad_last[self.global_stage(s, k, S)])
+                     for k in range(v)] for s in range(S)]
+            if len(self._tail_cache) > 256:
+                self._tail_cache.clear()
+            self._tail_cache[key] = prof
+        return prof
 
     def __repr__(self):
         return f"<Schedule {self.name}>"

@@ -8,6 +8,7 @@
 | ``interleaved``| 1/v                 | min(2(S−k−1) + (v−1)S + 1, v·b)/v  |
 | ``interleaved3``| 1/v (v=3)          | same closed form at v=3            |
 | ``zb_v``      | f/(v(f+d+w)) = 1/6   | min(b, S) (flat)                   |
+| ``wave``      | f/(v(f+d+w)) = 1/12  | min(b, S) (flat)                   |
 
 (f, d, w are the canonical unit times, full backward = dgrad + wgrad =
 2·forward; inflight is in full-stage activation sets, so chunked
@@ -16,7 +17,10 @@ is regression-tested against the op-list derivation
 (``Schedule.derived_alpha`` / ``derived_inflight``) in
 ``tests/test_schedules.py`` — the op lists are the source of truth, the
 closed forms keep ``cost_model.evaluate`` / ``heteroauto.search`` O(1)
-per candidate plan.
+per candidate plan.  The per-chunk ``wgrad_tails`` windows (the
+grad-sync overlap contract, DESIGN.md §10) are closed forms too:
+all-zero for single-chunk schedules, (v−1−k)·w/v for the zig-zag
+greedy family, k·S·(d+w)/v for chunk-major interleaving.
 """
 from __future__ import annotations
 
@@ -177,42 +181,37 @@ class Interleaved1F1B(Schedule):
         v = self.n_chunks
         return min(2 * (S - stage - 1) + (v - 1) * S + 1, v * b) / v
 
+    def wgrad_tails(self, num_stages: int, microbatches: int
+                    ) -> List[float]:
+        """Chunk-major drains chunks in DESCENDING slot order per group
+        of S microbatches: after chunk k's last backward the stage still
+        runs the k lower chunks' backwards of the final group — k·S
+        chunk-backward ops of (d+w)/v each."""
+        f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+        v = self.n_chunks
+        return [k * num_stages * (d + w) / v for k in range(v)]
 
-class ZBV(Schedule):
-    """ZB-V (Qi et al., "Pipeline Parallelism with Controllable Memory"):
-    two chunks per device placed in a V — device s hosts global stages
-    ``s`` (down the left leg) and ``2S−1−s`` (back up the right leg) — so
-    the turn of the V (g = S−1 → S) is a *local* hop and the drain chain
-    re-enters each device immediately.  Backward is split into dgrad /
-    wgrad like ZB-H1; wgrad is the bubble filler.
 
-    Op lists are generated by a deterministic greedy list scheduler:
-    priority dgrad > forward > wgrad (the dgrad chain is the critical
-    path, wgrad fills what would otherwise be bubble), with forward
-    injection throttled so no device ever stashes more than min(b, S)
-    full-stage activation sets — the 1F1B-peak-memory property the paper
-    claims for ZB-V.  ``ops`` builds the canonical order (unit times);
-    ``ops_timed`` re-runs the same greedy at profiled per-stage durations
-    — the ZB papers schedule at measured times, and a canonical-ratio
-    order replays poorly when dgrad ≠ wgrad — which is what the
-    simulator uses.  Per-device forward order is in both cases the tight
-    stream sorted by injection tick 2m + g, exactly the order the SPMD
-    runtime's tick-synchronous scan requires (DESIGN §7).
+class _GreedyZigZag(Schedule):
+    """Shared greedy list-scheduler for zig-zag chunk placements whose
+    leg turns are device-local hops (the V of ZB-V, the W of ``wave``).
 
-    α = f/(v·(f+d+w)) = 1/6 at canonical units: the only residual bubble
-    is the forward fill ramp (S−1 chunk-forward hops), which a single-
-    iteration replay cannot remove; the paper's "ZB-V ⇒ α = 0" drops the
-    ramp (exact in the repeated-iteration regime where iteration k+1's
-    warmup fills iteration k's cooldown).  inflight(k) = min(b, S), flat:
-    every device stashes the same peak — equal to 1F1B's *worst* stage,
-    but not decreasing toward the tail like 1F1B's min(b, S−k).
-
-    Requires b ≥ S: with fewer microbatches the drain starves the filler
-    and the derived α degrades above the closed form.
+    Subclasses fix ``n_chunks`` and the placement
+    (``global_stage``/``device_of``) plus the forward injection tick
+    ``_t0(m, S)``; the construction below is placement-generic.  Op
+    lists come from a deterministic greedy: priority dgrad > forward >
+    wgrad (the dgrad chain is the critical path, wgrad fills what would
+    otherwise be bubble), with forward injection throttled so no device
+    ever stashes more than ``_stash_cap`` full-stage activation sets.
+    ``ops`` builds the canonical order (unit times); ``ops_timed``
+    re-runs the same greedy at profiled per-stage durations — the ZB
+    papers schedule at measured times, and a canonical-ratio order
+    replays poorly when dgrad ≠ wgrad — which is what the simulator
+    uses.  Per-device forward order is in both cases the tight stream
+    sorted by injection tick ``_t0(m, S) + g``, exactly the order the
+    SPMD runtime's tick-synchronous scan requires (DESIGN §7).
     """
 
-    name = "zb_v"
-    n_chunks = 2
     splits_backward = True
 
     def __init__(self):
@@ -222,11 +221,14 @@ class ZBV(Schedule):
     def supports(self, S: int, b: int) -> bool:
         return S >= 2 and b >= S
 
-    def global_stage(self, stage: int, chunk: int, num_stages: int) -> int:
-        return stage if chunk == 0 else 2 * num_stages - 1 - stage
+    def _t0(self, m: int, S: int) -> int:
+        """Forward injection tick of microbatch m (the tight-stream
+        schedule is rigid: F(m, g) runs at tick _t0(m) + g)."""
+        raise NotImplementedError
 
-    def device_of(self, g: int, num_stages: int) -> int:
-        return g if g < num_stages else 2 * num_stages - 1 - g
+    def _stash_cap(self, S: int, b: int) -> float:
+        """Peak stashed activation sets per device (full-stage units)."""
+        return float(min(b, S))
 
     def ops(self, S: int, b: int) -> List[List[Op]]:
         return self.ops_timed(S, b, [1.0] * S, [1.0] * S, [1.0] * S)
@@ -257,14 +259,14 @@ class ZBV(Schedule):
                 for s in range(S)]
         slot = {gmap[s][k]: k for s in range(S) for k in range(v)}
         # per-device forward order: the tight stream sorted by the
-        # injection tick 2m + g (chunk0 ticks ≡ s, chunk1 ticks ≡ s+1
-        # mod 2, so a device's two streams never collide)
+        # injection tick _t0(m) + g; subclasses choose _t0 so that no
+        # two chunk streams of one device ever collide on a tick
         f_stream = []
         for s in range(S):
-            keyed = sorted((2 * m + gmap[s][k], m, k)
+            keyed = sorted((self._t0(m, S) + gmap[s][k], m, k)
                            for k in range(v) for m in range(b))
             f_stream.append([(m, k) for _, m, k in keyed])
-        cap = v * min(b, S)                  # stash cap, in chunk units
+        cap = v * self._stash_cap(S, b)      # stash cap, in chunk units
         f_done: Dict[Tuple[int, int], float] = {}  # (m, g) -> finish time
         d_done: Dict[Tuple[int, int], float] = {}
         seq: List[List[Op]] = [[] for _ in range(S)]
@@ -334,11 +336,111 @@ class ZBV(Schedule):
         return seq
 
     def alpha(self, num_stages=None, microbatches=None) -> float:
+        # the only residual bubble of a zig-zag greedy is the forward
+        # fill ramp: S−1 chunk-forward hops of f/v each
         f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
         return f / (self.n_chunks * (f + d + w))
 
     def inflight(self, S: int, b: int, stage: int) -> float:
-        return float(min(b, S))
+        return self._stash_cap(S, b)
+
+    def wgrad_tails(self, num_stages: int, microbatches: int
+                    ) -> List[float]:
+        """The greedy defers wgrad to fill bubbles, so each chunk's
+        final W lands in the end-of-iteration W backlog: slot k (whose
+        pending W sorts before the higher slots') completes v−1−k
+        wgrad ops of w/v each before the stage's last op."""
+        f, d, w = self.UNIT_F, self.UNIT_D, self.UNIT_W
+        v = self.n_chunks
+        return [(v - 1 - k) * w / v for k in range(v)]
+
+
+class ZBV(_GreedyZigZag):
+    """ZB-V (Qi et al., "Pipeline Parallelism with Controllable Memory"):
+    two chunks per device placed in a V — device s hosts global stages
+    ``s`` (down the left leg) and ``2S−1−s`` (back up the right leg) — so
+    the turn of the V (g = S−1 → S) is a *local* hop and the drain chain
+    re-enters each device immediately.  Backward is split into dgrad /
+    wgrad like ZB-H1; wgrad is the bubble filler (greedy construction:
+    see :class:`_GreedyZigZag`).
+
+    α = f/(v·(f+d+w)) = 1/6 at canonical units: the only residual bubble
+    is the forward fill ramp (S−1 chunk-forward hops), which a single-
+    iteration replay cannot remove; the paper's "ZB-V ⇒ α = 0" drops the
+    ramp (exact in the repeated-iteration regime where iteration k+1's
+    warmup fills iteration k's cooldown).  inflight(k) = min(b, S), flat:
+    every device stashes the same peak — equal to 1F1B's *worst* stage,
+    but not decreasing toward the tail like 1F1B's min(b, S−k).
+
+    Requires b ≥ S: with fewer microbatches the drain starves the filler
+    and the derived α degrades above the closed form.
+    """
+
+    name = "zb_v"
+    n_chunks = 2
+
+    def global_stage(self, stage: int, chunk: int, num_stages: int) -> int:
+        return stage if chunk == 0 else 2 * num_stages - 1 - stage
+
+    def device_of(self, g: int, num_stages: int) -> int:
+        return g if g < num_stages else 2 * num_stages - 1 - g
+
+    def _t0(self, m: int, S: int) -> int:
+        # inject every 2 ticks: a device's chunk streams sit at offsets
+        # s and 2S−1−s, whose difference is odd — never a collision
+        return 2 * m
+
+
+class Wave(_GreedyZigZag):
+    """W-shaped ("wave") placement — the v = 4 member of the zig-zag
+    family (Hanayo-style wave pipelining composed with the zero-bubble
+    backward split): device s hosts global stages ``s`` (down),
+    ``2S−1−s`` (up), ``2S+s`` (down again) and ``4S−1−s`` (up again).
+    All three leg turns (g = S−1→S at device S−1, 2S−1→2S at device 0,
+    3S−1→3S at device S−1) are device-local hops, so like ZB-V the
+    drain never pays a wrap-around transfer.
+
+    Doubling the chunk count halves the fill ramp again:
+    α = f/(v·(f+d+w)) = **1/12** at canonical units — half of ZB-V's
+    1/6 — at the same flat min(b, S) activation stash (the cap is in
+    full-stage sets; wave stashes 4 quarter-chunks where ZB-V stashes 2
+    half-chunks).  The price is tick-stream density: a device hosts two
+    SAME-parity chunk streams (offsets s and 2S+s differ by 2S), so
+    injections must avoid pairwise tick differences of exactly 2S —
+    microbatches enter in groups of S two ticks apart, with a 2S+2 gap
+    between groups (``_t0``); forward throughput is unchanged because
+    each device runs v = 4 chunk-forwards per microbatch.
+
+    Grad-sync overlap is where the W shape pays off (DESIGN.md §10):
+    with 4 chunks per device, 3/4 of each stage's gradient buckets are
+    ready before the stage's final wgrad, so more of the dp sync hides
+    under the wgrad wave than ZB-V (1/2) or any single-chunk schedule
+    (none).
+    """
+
+    name = "wave"
+    n_chunks = 4
+
+    def global_stage(self, stage: int, chunk: int, num_stages: int) -> int:
+        S = num_stages
+        leg = chunk
+        if leg == 0:
+            return stage
+        if leg == 1:
+            return 2 * S - 1 - stage
+        if leg == 2:
+            return 2 * S + stage
+        return 4 * S - 1 - stage
+
+    def device_of(self, g: int, num_stages: int) -> int:
+        leg, r = divmod(g, num_stages)
+        return r if leg % 2 == 0 else num_stages - 1 - r
+
+    def _t0(self, m: int, S: int) -> int:
+        # groups of S microbatches at spacing 2, groups 4S apart: the
+        # same-parity streams (offset difference exactly 2S) never
+        # collide because no two injection ticks differ by exactly 2S
+        return 4 * S * (m // S) + 2 * (m % S)
 
 
 register(GPipe())
@@ -351,3 +453,4 @@ register(Interleaved1F1B(2))
 # registry entry, and the runtime executes it via the same tick tables)
 register(Interleaved1F1B(3))
 register(ZBV())
+register(Wave())

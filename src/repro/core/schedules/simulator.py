@@ -1,4 +1,4 @@
-"""ONE generic event-driven pipeline simulator (DESIGN.md §3).
+"""ONE generic event-driven pipeline simulator (DESIGN.md §3, §10).
 
 Replaces the per-schedule simulation loops: any :class:`Schedule`'s op
 lists are replayed against per-stage heterogeneous compute times and P2P
@@ -11,9 +11,9 @@ one device); an op waits for its cross-stage dependencies:
 
 The (stage, chunk) → g mapping comes from the schedule's placement
 (:meth:`Schedule.global_stage`): chunk-major for Megatron interleaving,
-V-shaped for ZB-V — where the g = S−1 → S hop lands on the SAME device
-and is therefore transfer-free, the property that lets ZB-V drain at
-dgrad speed without paying the wrap-around hop.
+V-shaped for ZB-V, W-shaped for ``wave`` — where the leg turns land on
+the SAME device and are therefore transfer-free, the property that lets
+the zig-zag schedules drain at dgrad speed without paying wrap hops.
 
 ``overlap=False`` models un-overlapped P2P (paper §5): the transfer also
 occupies the *sender* stage.  For chunked (interleaved) schedules each op
@@ -22,33 +22,73 @@ chunk-major wrap from stage S−1 back to stage 0) is charged the worst
 boundary cost.  ``wgrad_frac`` may be per-stage (see
 ``repro.core.schedule.plan_to_schedule_inputs``, which derives it from
 each stage's analytic op mix) or one global float.
+
+Data-parallel gradient sync (DESIGN.md §10): ``sync_events`` attaches
+per-stage bucket drains to the replay.  A bucket becomes *ready* when
+the last W (or, for single-``B`` schedules, the last B) touching its
+leaves completes on its stage — per-chunk granularity: chunk g's grads
+are final only after its last microbatch's wgrad.  Ready buckets drain
+serially over the stage's dp transport in readiness order (the runtime
+issues per-bucket collectives in wgrad-completion order —
+``heteropp._make_dp_train_step``), and the makespan charges only the
+tail that outlives the wgrad wave: ``exposed_sync[s] = max(0,
+sync_done[s] − stage_end[s])``.  Chunked schedules genuinely overlap
+more — a v-chunk stage has (v−1)/v of its buckets ready before its
+final wgrad, which is the whole point of the wave placement.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 from .base import ScheduleLike, get_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One gradient bucket to drain over the dp transport.
+
+    ``seconds`` is the bucket's closed-form sync time
+    (``dataparallel.grad_sync.sync_time``); ``gstages`` are the global
+    chunk-stages whose wgrad feeds it — the bucket is ready when the
+    LAST W (or B) op of every named chunk has completed."""
+    seconds: float
+    gstages: Tuple[int, ...]
 
 
 @dataclasses.dataclass
 class SimResult:
     makespan: float
-    stage_busy: List[float]
+    stage_busy: List[float]      # compute + update time per stage
     bubble_frac: float
+    # compute-only end per physical stage (before sync tail and update)
+    stage_end: List[float] = dataclasses.field(default_factory=list)
+    # non-overlapped grad-sync tail per physical stage (0 without
+    # sync_events): the part of the bucket drain that outlives the
+    # stage's wgrad wave
+    exposed_sync: List[float] = dataclasses.field(default_factory=list)
+    # per GLOBAL chunk-stage g: completion time of the last op that
+    # finalizes g's weight gradients (W, or B for single-B schedules)
+    grad_last: List[float] = dataclasses.field(default_factory=list)
 
 
 def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
              t_bwd: Sequence[float], microbatches: int,
              t_p2p: Sequence[float], *, overlap: bool = True,
              t_update: Optional[Sequence[float]] = None,
-             wgrad_frac: Union[float, Sequence[float]] = 0.5) -> SimResult:
+             wgrad_frac: Union[float, Sequence[float]] = 0.5,
+             sync_events: Optional[Sequence[Sequence[SyncEvent]]] = None
+             ) -> SimResult:
     """t_fwd/t_bwd: per-stage per-microbatch compute times (len S; t_bwd is
     the FULL backward — for backward-split schedules it is divided into
     dgrad = (1−wgrad_frac)·t_bwd and wgrad = wgrad_frac·t_bwd;
     ``wgrad_frac`` is one float or a per-stage sequence of len S).
     t_p2p[i]: activation transfer across boundary i → i+1 (len S−1); the
-    same cost is charged to gradient transfers on the way back."""
+    same cost is charged to gradient transfers on the way back.
+    ``sync_events``: optional per-physical-stage bucket lists (len S) —
+    see the module docstring for the readiness/drain/exposure rules.
+    ``t_update`` runs after the stage's sync tail (the optimizer needs
+    the synced grads) and counts as busy time."""
     sched = get_schedule(schedule)
     S, b, v = len(t_fwd), microbatches, sched.n_chunks
     assert sched.supports(S, b), (sched.name, S, b)
@@ -58,18 +98,21 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
     wf = list(wgrad_frac) if isinstance(wgrad_frac, (list, tuple)) \
         else [float(wgrad_frac)] * S
     assert len(wf) == S, (len(wf), S)
+    if sync_events is not None:
+        assert len(sync_events) == S, (len(sync_events), S)
 
     fdur = [t / v for t in t_fwd]
     bdur = [t / v for t in t_bwd]
     ddur = [t * (1.0 - f) / v for t, f in zip(t_bwd, wf)]
     wdur = [t * f / v for t, f in zip(t_bwd, wf)]
-    # schedules that plan at profiled times (zb_v) specialize their op
-    # lists to the actual durations; the rest return the canonical order
+    # schedules that plan at profiled times (zb_v, wave) specialize their
+    # op lists to the actual durations; the rest return the canonical
+    # order
     ops = sched.ops_timed(S, b, fdur, ddur, wdur)
 
     def xfer(a: int, c: int) -> float:
         if a == c:
-            return 0.0                        # same device (e.g. ZB-V turn)
+            return 0.0                        # same device (zig-zag turn)
         if abs(a - c) == 1:
             return t_p2p[min(a, c)]
         return max(t_p2p) if t_p2p else 0.0   # interleaved wrap-around hop
@@ -78,6 +121,7 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
 
     fwd_done = [[None] * b for _ in range(G)]
     dgrad_done = [[None] * b for _ in range(G)]   # B sets this too
+    grad_last = [0.0] * G                      # last W (or B) end per g
     free = [0.0] * S
     busy = [0.0] * S
     idx = [0] * S
@@ -109,12 +153,15 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
                         (0.0 if overlap or g == 0 else xfer(s, dev(g - 1, S)))
                     start = max(free[s], ready)
                     dgrad_done[g][op.mb] = start + dur
+                    if op.kind == "B":        # B finalizes wgrad too
+                        grad_last[g] = max(grad_last[g], start + dur)
                 else:                                   # W
                     dep = dgrad_done[g][op.mb]
                     if dep is None:
                         break
                     start = max(free[s], dep)
                     dur = wdur[s]
+                    grad_last[g] = max(grad_last[g], start + dur)
                 free[s] = start + dur
                 busy[s] += dur
                 idx[s] += 1
@@ -122,6 +169,26 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
 
     assert all(i == len(o) for i, o in zip(idx, ops)), \
         f"deadlocked schedule {sched.name} (S={S}, b={b})"
-    end = max(free[s] + t_update[s] for s in range(S))
-    bubble = 1.0 - sum(busy) / (S * end) if end else 0.0
-    return SimResult(end, busy, bubble)
+
+    # ---- dp grad-sync drain: per-stage serial channel (its own NIC) ----
+    exposed = [0.0] * S
+    sync_done = [0.0] * S
+    if sync_events is not None:
+        for s in range(S):
+            evs = sorted(sync_events[s],
+                         key=lambda e: max((grad_last[g] for g in e.gstages),
+                                           default=0.0))
+            t = 0.0
+            for e in evs:
+                ready = max((grad_last[g] for g in e.gstages), default=0.0)
+                t = max(t, ready) + e.seconds
+            sync_done[s] = t
+            exposed[s] = max(0.0, t - free[s])
+
+    # update runs after the stage's sync tail (the optimizer consumes the
+    # synced grads) and is real work: it counts as busy, not bubble
+    end = max(max(free[s], sync_done[s]) + t_update[s] for s in range(S))
+    total_busy = [busy[s] + t_update[s] for s in range(S)]
+    bubble = 1.0 - sum(total_busy) / (S * end) if end else 0.0
+    return SimResult(end, total_busy, bubble, list(free), exposed,
+                     grad_last)

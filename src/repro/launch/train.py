@@ -50,20 +50,29 @@ from .mesh import make_local_mesh
 
 
 def _pipeline_spec(args, cfg):
-    """Resolve the PipelineSpec: from a saved plan (--plan), a fresh
-    HeteroAuto search (--search), or the uniform CLI split."""
+    """Resolve the PipelineSpec plus the dp grad-sync mode: from a saved
+    plan (--plan), a fresh HeteroAuto search (--search), or the uniform
+    CLI split.  Plans carry their searched sync config (dp_sync +
+    bucket_bytes — DESIGN.md §10), so the plan paths refuse an explicit
+    --grad-sync exactly like the other plan-owned flags."""
     from ..core import heteropp as HP
 
     mb = args.microbatches
     if args.plan and args.search:
         raise SystemExit("--plan and --search are mutually exclusive")
     if args.plan or args.search:
-        # the plan carries schedule, stage count, tp AND dp; conflicting
-        # explicit flags would be silently ignored — refuse instead
+        # the plan carries schedule, stage count, tp, dp AND the grad-
+        # sync config; conflicting explicit flags would be silently
+        # ignored — refuse instead
         src = "--plan" if args.plan else "--search"
         if args.schedule is not None:
             raise SystemExit(f"{src} uses the plan's schedule; drop "
                              f"--schedule {args.schedule}")
+        if args.grad_sync is not None:
+            raise SystemExit(f"{src} sets the grad-sync mode from the "
+                             f"plan (searched over sync mode × bucket "
+                             f"size — DESIGN.md §10); drop --grad-sync "
+                             f"{args.grad_sync}")
         if args.pipeline_parallel > 1:
             raise SystemExit(f"{src} sets the stage count from the plan; "
                              f"drop --pipeline-parallel")
@@ -76,13 +85,20 @@ def _pipeline_spec(args, cfg):
                              f"domains execute on the (dp, pipe, tp) "
                              f"mesh); drop --data-parallel "
                              f"{args.data_parallel}")
+        if args.bucket_bytes:
+            raise SystemExit(f"{src} sets the grad-sync bucket size from "
+                             f"the plan (searched over bucket size × sync "
+                             f"mode — DESIGN.md §10); drop --bucket-bytes "
+                             f"{args.bucket_bytes}")
 
     def _from_plan(plan):
         try:
             spec = HP.from_plan(plan, microbatches=mb or None,
                                 execute_tp=True, execute_dp=True)
             HP.validate_tensor_parallel(cfg, spec.tensor_parallel)
-            return spec
+            # the plan's searched sync mode executes too (its
+            # bucket_bytes already rode in through from_plan)
+            return spec, plan.dp_sync
         except (ValueError, NotImplementedError) as e:
             raise SystemExit(str(e)) from None
 
@@ -118,13 +134,37 @@ def _pipeline_spec(args, cfg):
         HP.validate_tensor_parallel(cfg, tp)
     except (ValueError, NotImplementedError) as e:
         raise SystemExit(str(e)) from None
+    grad_sync = args.grad_sync or "reduce_scatter"
+    # flags the step would never consult must refuse, not silently drop
+    # (same rule as the other conflicting flags)
+    if args.grad_sync is not None and dp <= 1:
+        raise SystemExit(
+            f"--grad-sync {args.grad_sync} needs --data-parallel > 1: "
+            f"there is no dp gradient sync without dp replicas")
+    if args.bucket_bytes:
+        if args.bucket_bytes < 0:
+            raise SystemExit(
+                f"--bucket-bytes must be positive: {args.bucket_bytes}")
+        if dp <= 1:
+            raise SystemExit(
+                f"--bucket-bytes {args.bucket_bytes} needs "
+                f"--data-parallel > 1: there is no dp grad sync to "
+                f"bucket")
+        if grad_sync != "psum":
+            raise SystemExit(
+                f"--bucket-bytes {args.bucket_bytes} only shapes the "
+                f"psum sync mode (ZeRO-1 reduce_scatter keeps one "
+                f"message per leaf — DESIGN.md §10); add "
+                f"--grad-sync psum or drop the flag")
     sched = get_schedule(args.schedule or "1f1b")
     base, rem = divmod(cfg.num_layers, pp)
     phys = [base + (1 if i < rem else 0) for i in range(pp)]
-    return HP.PipelineSpec(pp, HP.chunk_layer_counts(phys, sched),
+    spec = HP.PipelineSpec(pp, HP.chunk_layer_counts(phys, sched),
                            microbatches=mb or pp, schedule=sched.name,
                            n_chunks=sched.n_chunks, tensor_parallel=tp,
-                           data_parallel=dp)
+                           data_parallel=dp,
+                           bucket_bytes=args.bucket_bytes)
+    return spec, grad_sync
 
 
 def run_pipeline(args, cfg):
@@ -136,7 +176,7 @@ def run_pipeline(args, cfg):
     from ..optim import adamw
 
     devices = jax.devices()
-    spec = _pipeline_spec(args, cfg)
+    spec, grad_sync = _pipeline_spec(args, cfg)
     pp, tp, dp = spec.num_stages, spec.tensor_parallel, spec.data_parallel
     need = dp * pp * tp
     if len(devices) < need:
@@ -158,7 +198,10 @@ def run_pipeline(args, cfg):
     print(f"pipeline: stages={pp} tp={tp} dp={dp} v={spec.n_chunks} "
           f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
           f"schedule={spec.schedule}"
-          + (f" grad_sync={args.grad_sync}" if dp > 1 else ""))
+          + (f" grad_sync={grad_sync}" if dp > 1 else "")
+          + (f" bucket_bytes={spec.bucket_bytes}"
+             if dp > 1 and grad_sync == "psum" and spec.bucket_bytes
+             else ""))
 
     from ..models import model as M
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -166,7 +209,7 @@ def run_pipeline(args, cfg):
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 5))
     step_fn = jax.jit(HP.make_spmd_pipeline_train_step(
-        cfg, spec, mesh, opt, grad_sync=args.grad_sync))
+        cfg, spec, mesh, opt, grad_sync=grad_sync))
     state = (stage_params, adamw.init_opt_state(stage_params),
              jnp.int32(0))
 
@@ -210,12 +253,22 @@ def main():
                          "streaming its share of the microbatches "
                          "(default 1; saved/searched plans carry their "
                          "own dp and refuse this flag)")
-    ap.add_argument("--grad-sync", default="reduce_scatter",
+    ap.add_argument("--grad-sync", default=None,
                     choices=["psum", "reduce_scatter"],
                     help="with --data-parallel: dp gradient sync mode — "
                          "flat psum (replicated optimizer state) or "
                          "ZeRO-1 reduce-scatter + all-gather "
-                         "(dp-sharded optimizer state; default)")
+                         "(dp-sharded optimizer state; default "
+                         "reduce_scatter; saved/searched plans carry "
+                         "their own sync config and refuse this flag)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="with --data-parallel --grad-sync psum: coalesce "
+                         "gradient leaves into fused per-bucket "
+                         "all-reduces of at most this many bytes, issued "
+                         "in wgrad-completion order (DESIGN.md §10); 0 = "
+                         "one collective per leaf (saved/searched plans "
+                         "carry their own bucket size and refuse this "
+                         "flag)")
     ap.add_argument("--schedule", default=None,
                     choices=available_schedules(),
                     help="pipeline schedule (with --pipeline-parallel; "

@@ -77,16 +77,18 @@ def main():
     loss_fn1 = HP.make_spmd_pipeline_loss(cfg, spec1, mesh2d)
     loss1 = float(loss_fn1(sp, mask, tokens))
     g1 = {}
-    for schedule in ("1f1b", "zb_v"):
+    for schedule in ("1f1b", "zb_v", "wave"):
         s1 = _spec(phys, schedule, b=DP * B)
         sp1, mask1 = HP.split_stage_params(params, cfg, s1)
         lf1 = HP.make_spmd_pipeline_loss(cfg, s1, mesh2d)
         g1[schedule] = jax.grad(lambda p: lf1(p, mask1, tokens))(sp1)
 
     # dp=2 on the 3-D mesh: the per-replica microbatch count halves
+    # (wave rides along: the v=4 W placement runs on the same 8-device
+    # runtime through the generic tick tables — ISSUE 5 acceptance)
     losses = {}
     grads = {}
-    for schedule in ("1f1b", "zb_v"):
+    for schedule in ("1f1b", "zb_v", "wave"):
         spec = _spec(phys, schedule, dp=DP)
         spd, maskd = HP.split_stage_params(params, cfg, spec)
         loss_fn = HP.make_spmd_pipeline_loss(cfg, spec, mesh3d)
@@ -95,7 +97,7 @@ def main():
             lambda p: loss_fn(p, maskd, tokens))(spd)
     # same per-layer math in the same order -> bit-identical across
     # schedules at fixed dp
-    assert losses["1f1b"] == losses["zb_v"], losses
+    assert losses["1f1b"] == losses["zb_v"] == losses["wave"], losses
 
     # global-batch semantics: dp=2 == dp=1 up to fp32 reduction order
     ref_losses = []
@@ -111,7 +113,7 @@ def main():
         assert err1 < 1e-6, (name, l, loss1)
         assert errm < 2e-3, (name, l, ref)
 
-    for schedule in ("1f1b", "zb_v"):
+    for schedule in ("1f1b", "zb_v", "wave"):
         err = _tree_rel_err(grads[schedule], g1[schedule])
         print(f"dp2 {schedule} grad rel err vs dp1: {err:.2e}")
         assert err < 1e-6, (schedule, err)
@@ -137,6 +139,34 @@ def main():
     err_modes = _tree_rel_err(states["psum"][0], states["reduce_scatter"][0])
     print(f"psum vs reduce_scatter params rel err: {err_modes:.2e}")
     assert err_modes < 1e-6, err_modes
+
+    # bucketed psum (DESIGN.md §10): fused per-bucket all-reduces in
+    # wgrad-completion order are the SAME element-wise sums — params
+    # after one step must be bit-identical to the per-leaf psum program
+    bspec = dataclasses.replace(spec, bucket_bytes=64 * 1024)
+    step_b = HP.make_spmd_pipeline_train_step(cfg, bspec, mesh3d, opt,
+                                              grad_sync="psum")
+    state_b = (spd, adamw.init_opt_state(spd), jnp.int32(0))
+    state_b, mets_b = jax.jit(step_b)(state_b, maskd, {"tokens": tokens})
+    err_bucket = _tree_rel_err(state_b[0], states["psum"][0])
+    print(f"bucketed vs per-leaf psum params rel err: {err_bucket:.2e}")
+    assert err_bucket == 0.0, err_bucket
+    # and on a CHUNKED layout the chunk-sliced bucket stream reassembles
+    # correctly (wave: 4 chunk slots per device)
+    wspec = dataclasses.replace(_spec(phys, "wave", dp=DP),
+                                bucket_bytes=48 * 1024)
+    wsp, wmask = HP.split_stage_params(params, cfg, wspec)
+    step_w = HP.make_spmd_pipeline_train_step(cfg, wspec, mesh3d, opt,
+                                              grad_sync="psum")
+    state_w0 = (wsp, adamw.init_opt_state(wsp), jnp.int32(0))
+    state_w, _ = jax.jit(step_w)(state_w0, wmask, {"tokens": tokens})
+    step_w1 = HP.make_spmd_pipeline_train_step(
+        cfg, dataclasses.replace(wspec, bucket_bytes=0), mesh3d, opt,
+        grad_sync="psum")
+    state_w1, _ = jax.jit(step_w1)(state_w0, wmask, {"tokens": tokens})
+    err_wave = _tree_rel_err(state_w[0], state_w1[0])
+    print(f"wave bucketed vs per-leaf psum params rel err: {err_wave:.2e}")
+    assert err_wave == 0.0, err_wave
 
     # dp=1 train step on the same global batch must land on the same
     # params (up to dp reduction order)

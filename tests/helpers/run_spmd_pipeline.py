@@ -52,19 +52,21 @@ def main():
     # identical program, bit-identical loss
     assert losses["gpipe"] == loss == losses["zb_h1"], losses
 
-    # chunked (virtual-stage) schedules: v=2 chunk slots per device, same
-    # per-layer math in the same order -> still bit-identical
-    for schedule in ("interleaved", "zb_v"):
+    # chunked (virtual-stage) schedules: v chunk slots per device, same
+    # per-layer math in the same order -> still bit-identical (wave's
+    # v=4 W placement rides the same generic tick tables)
+    for schedule, v in (("interleaved", 2), ("zb_v", 2), ("wave", 4)):
         cspec = HP.PipelineSpec(
             4, HP.chunk_layer_counts(phys, schedule), microbatches=b,
-            schedule=schedule, n_chunks=2)
+            schedule=schedule, n_chunks=v)
         csp, cmask = HP.split_stage_params(params, cfg, cspec)
         loss_fn = HP.make_spmd_pipeline_loss(cfg, cspec, mesh, remat=True)
         with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
                 else _null():
             losses[schedule] = float(loss_fn(csp, cmask, tokens))
-    assert losses["interleaved"] == loss == losses["zb_v"], losses
-    print(f"chunked v=2 losses bit-exact vs single-chunk: "
+    assert losses["interleaved"] == loss == losses["zb_v"] \
+        == losses["wave"], losses
+    print(f"chunked losses bit-exact vs single-chunk: "
           f"{losses['interleaved']:.6f}")
 
     # reference 1: monolithic forward loss over all microbatches

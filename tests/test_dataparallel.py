@@ -146,6 +146,66 @@ def test_sync_time_matches_closed_forms():
         sync_time(gb, 2, "device_rdma", "allgather")
 
 
+def test_bucketize_edge_cases():
+    """Satellite (ISSUE 5): zero-byte leaves ride along in order, and a
+    leaf exactly equal to bucket_bytes closes its bucket without
+    spilling into the next."""
+    gb = bucketize([("a", 0), ("b", 10), ("c", 0)], bucket_bytes=10)
+    assert gb.total_bytes == 10
+    assert [n for b in gb.buckets for n, _ in b] == ["a", "b", "c"]
+    # exact-fit leaf: closes the bucket at exactly bucket_bytes
+    gb = bucketize([("a", 10), ("b", 1)], bucket_bytes=10)
+    assert gb.sizes == [10, 1] and gb.num_buckets == 2
+    # exact fill by accumulation closes too
+    gb = bucketize([("a", 4), ("b", 6), ("c", 1)], bucket_bytes=10)
+    assert gb.sizes == [10, 1]
+    # all-zero tree: one empty-byte bucket, zero sync time
+    gb = bucketize([("a", 0), ("b", 0)], bucket_bytes=10)
+    assert gb.num_buckets == 1 and gb.total_bytes == 0
+
+
+def test_sync_time_edge_cases():
+    """Satellite (ISSUE 5): dp=1 short-circuits to zero regardless of
+    mode, and psum's bytes-proportional per-bucket attribution sums to
+    the fused total."""
+    gb = bucketize([("a", 2 ** 20), ("b", 3 * 2 ** 20), ("c", 2 ** 19)],
+                   bucket_bytes=2 ** 20)
+    for mode in ("psum", "reduce_scatter"):
+        z = sync_time(gb, 1, "device_rdma", mode)
+        assert z["total"] == 0.0 and z["messages"] == 0
+        assert z["per_bucket"] == [0.0] * gb.num_buckets
+    ps = sync_time(gb, 4, "cpu_tcp", "psum")
+    assert sum(ps["per_bucket"]) == pytest.approx(ps["total"])
+    # attribution is bytes-proportional bucket by bucket
+    for share, sz in zip(ps["per_bucket"], gb.sizes):
+        assert share == pytest.approx(ps["total"] * sz / gb.total_bytes)
+    rs = sync_time(gb, 4, "cpu_tcp", "reduce_scatter")
+    assert sum(rs["per_bucket"]) == pytest.approx(rs["total"])
+    with pytest.raises(ValueError, match="dp"):
+        sync_time(gb, 0, "device_rdma", "psum")
+
+
+def test_replica_grad_norm_rejects_mismatched_specs():
+    """Satellite (ISSUE 5): a specs tree with a different leaf count
+    used to zip-truncate silently, dropping leaves from the global grad
+    norm — it must raise instead."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.dataparallel.grad_sync import replica_grad_norm
+    grads = {"a": jnp.ones((2, 2)), "b": jnp.ones((3,)),
+             "extra": jnp.full((4,), 7.0)}
+    specs = {"a": P(), "b": P()}          # missing the 'extra' leaf
+    with pytest.raises(ValueError, match="leaves"):
+        replica_grad_norm(grads, specs, {})
+    # and the matched tree still computes the plain norm with no axes
+    ok = replica_grad_norm({"a": grads["a"], "b": grads["b"]},
+                           specs, {})
+    want = float(jnp.sqrt(jnp.sum(jnp.square(grads["a"]))
+                          + jnp.sum(jnp.square(grads["b"]))))
+    assert float(ok) == pytest.approx(want)
+
+
 def test_zero1_scatter_dim():
     assert zero1_scatter_dim((1, 4, 8), 2) == 1
     assert zero1_scatter_dim((1, 4, 8), 2, taken_dims=(1,)) == 2
@@ -316,6 +376,7 @@ def test_train_refuses_data_parallel_without_pipeline():
     assert "--pipeline-parallel" in r.stderr
 
 
+@pytest.mark.e2e
 def test_spmd_dp_pipeline_subprocess():
     """3-D (dp × pipe × tp) pipeline on 8 virtual devices: dp=2 matches
     the dp=1 pipeline and the monolithic model; both grad-sync modes

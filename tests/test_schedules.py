@@ -7,7 +7,7 @@ from repro.core import schedule as SCH
 from repro.core.schedules import (Interleaved1F1B, available_schedules,
                                   get_schedule, simulate)
 
-ALL = ["gpipe", "1f1b", "zb_h1", "interleaved", "zb_v"]
+ALL = ["gpipe", "1f1b", "zb_h1", "interleaved", "zb_v", "wave"]
 GRID = [(2, 2), (2, 8), (3, 6), (4, 8), (4, 16), (6, 12)]
 
 
@@ -25,6 +25,27 @@ def test_1f1b_uniform_bubble_matches_closed_form():
         r = simulate("1f1b", [1.0] * S, [2.0] * S, b, [0.0] * (S - 1))
         assert abs(r.bubble_frac - (S - 1) / (b + S - 1)) < 1e-9, (S, b)
         assert abs(r.makespan - (b + S - 1) * 3.0) < 1e-9
+
+
+@pytest.mark.parametrize("tu", [0.5, 2.0])
+def test_update_time_counts_as_busy_in_bubble(tu):
+    """Satellite (ISSUE 5): t_update used to inflate the makespan but
+    not stage_busy, overstating the bubble whenever t_update > 0.  With
+    the fix, uniform 1F1B obeys the exact closed form
+    bubble = 1 − (b·tc + tu) / ((b+S−1)·tc + tu)."""
+    for S, b in GRID:
+        tc = 3.0
+        r = simulate("1f1b", [1.0] * S, [2.0] * S, b, [0.0] * (S - 1),
+                     t_update=[tu] * S)
+        span = (b + S - 1) * tc + tu
+        assert abs(r.makespan - span) < 1e-9, (S, b)
+        assert r.stage_busy == pytest.approx([b * tc + tu] * S)
+        want = 1.0 - (b * tc + tu) / span
+        assert abs(r.bubble_frac - want) < 1e-9, (S, b)
+        # t_update must narrow the bubble vs the update-free replay (the
+        # old accounting WIDENED it)
+        r0 = simulate("1f1b", [1.0] * S, [2.0] * S, b, [0.0] * (S - 1))
+        assert r.bubble_frac < r0.bubble_frac
 
 
 @pytest.mark.parametrize("t_fwd,t_bwd,b,t_p2p", [
@@ -134,6 +155,94 @@ def test_zbv_beats_zbh1_on_hetero_fixture():
     assert zv.makespan < zh.makespan < f1.makespan, \
         (zv.makespan, zh.makespan, f1.makespan)
     assert zv.bubble_frac < zh.bubble_frac
+
+
+def test_wave_w_placement():
+    """W shape: legs run down, up, down, up; all three turns are
+    device-local; the last global stage lands on device 0 (like zb_v)."""
+    w = get_schedule("wave")
+    S = 4
+    assert [w.device_of(g, S) for g in range(4 * S)] == \
+        [0, 1, 2, 3, 3, 2, 1, 0, 0, 1, 2, 3, 3, 2, 1, 0]
+    for s in range(S):
+        slots = [w.global_stage(s, k, S) for k in range(4)]
+        assert slots == sorted(slots)
+        for k in range(4):
+            assert w.device_of(slots[k], S) == s
+    # every leg turn is a local hop
+    for g in (S - 1, 2 * S - 1, 3 * S - 1):
+        assert w.device_of(g, S) == w.device_of(g + 1, S)
+    assert w.supports(4, 4) and not w.supports(4, 2)   # needs b >= S
+
+
+def test_wave_alpha_halves_zbv():
+    """wave's fill ramp is f/v at v=4: α = 1/12, half of zb_v's 1/6,
+    at the same flat min(b, S) stash."""
+    w, zv = get_schedule("wave"), get_schedule("zb_v")
+    assert w.alpha() == pytest.approx(1 / 12)
+    assert w.alpha() == pytest.approx(zv.alpha() / 2)
+    for S, b in GRID:
+        if w.supports(S, b):
+            assert w.derived_alpha(S, b) == pytest.approx(1 / 12)
+            assert [w.inflight(S, b, k) for k in range(S)] == \
+                [min(b, S)] * S
+
+
+def test_wave_beats_zbv_on_hetero_fixture():
+    """The W placement's shorter fill ramp wins on the heterogeneous
+    4-stage fixture: wave < zb_v < zb_h1 in simulated makespan."""
+    t_fwd = [1.0, 1.4, 0.8, 1.2]
+    t_bwd = [2.0, 2.8, 1.6, 2.4]
+    t_p2p = [0.05, 0.05, 0.05]
+    w = simulate("wave", t_fwd, t_bwd, 8, t_p2p)
+    zv = simulate("zb_v", t_fwd, t_bwd, 8, t_p2p)
+    zh = simulate("zb_h1", t_fwd, t_bwd, 8, t_p2p)
+    assert w.makespan < zv.makespan < zh.makespan, \
+        (w.makespan, zv.makespan, zh.makespan)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_wgrad_tails_closed_form_matches_derivation(name):
+    """The closed-form wgrad-tail windows (the §10 overlap contract)
+    match the op-list derivation within one backward op per chunk —
+    boundary stages may schedule their final wgrads one op earlier or
+    later than the canonical pattern."""
+    sched = get_schedule(name)
+    tol = (sched.UNIT_D + sched.UNIT_W) / sched.n_chunks + 1e-9
+    for S, b in GRID:
+        if not sched.supports(S, b):
+            continue
+        closed = sched.wgrad_tails(S, b)
+        derived = sched.wgrad_tail_profile(S, b)
+        for s, row in enumerate(derived):
+            for k, tau in enumerate(row):
+                assert abs(closed[k] - tau) <= tol, (name, S, b, s, k)
+
+
+def test_sync_exposure_shrinks_with_chunk_count():
+    """Grad-sync overlap (DESIGN.md §10): on the hetero fixture with one
+    bucket per chunk (same total sync volume), the exposed tail halves
+    with every chunk doubling — none is hidden for single-chunk
+    schedules, 1/2 for zb_v, 3/4 for wave."""
+    from repro.core.schedules import SyncEvent
+    t_fwd = [1.0, 1.4, 0.8, 1.2]
+    t_bwd = [2.0, 2.8, 1.6, 2.4]
+    t_p2p = [0.05, 0.05, 0.05]
+    S, total = 4, 0.3
+    exposed = {}
+    for name in ("1f1b", "zb_h1", "zb_v", "wave"):
+        sched = get_schedule(name)
+        v = sched.n_chunks
+        evs = [[SyncEvent(total / v, (sched.global_stage(s, k, S),))
+                for k in range(v)] for s in range(S)]
+        r = simulate(name, t_fwd, t_bwd, 8, t_p2p, sync_events=evs)
+        r0 = simulate(name, t_fwd, t_bwd, 8, t_p2p)
+        assert r.makespan >= r0.makespan
+        exposed[name] = max(r.exposed_sync)
+    assert exposed["1f1b"] == pytest.approx(total)
+    assert exposed["zb_h1"] == pytest.approx(total)
+    assert exposed["zb_v"] == pytest.approx(total / 2)
+    assert exposed["wave"] == pytest.approx(total / 4)
 
 
 def test_zb_with_zero_wgrad_fraction_degenerates_to_1f1b():
