@@ -1,18 +1,137 @@
-"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference wall time on
-CPU is meaningless for TPU perf, so this reports the *structural* numbers
-that matter for the VMEM/roofline story (tile sizes, VMEM working set,
-arithmetic intensity) plus a correctness spot-check per kernel."""
+"""Kernel microbenchmarks: structure + correctness + measured timing.
+
+Two kinds of rows:
+
+``kernel.*``       — structural numbers (tile sizes, VMEM working set,
+                     arithmetic intensity) and a correctness spot-check.
+``table_kernels.*`` — measured wall time of the Pallas dispatch path
+                     (``repro.kernels.ops``) vs the jnp reference each
+                     kernel replaces, one row per (kernel × shape):
+                     attention prefill, flash-decode at three KV
+                     lengths, the SSD scan, and rmsnorm.
+
+On CPU the Pallas side runs in interpret mode, so the pallas/ref RATIO
+is not a TPU speedup — the detail column therefore also carries the
+TPU roofline terms (compute time at PEAK flops, memory time at HBM
+bandwidth, from ``benchmarks.roofline``) and which one dominates;
+that estimate is the number search should believe until the same rows
+are re-measured on hardware (``--backend pallas`` + real TPU flips
+interpret off automatically).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_kernels
+[--smoke]`` — ``--smoke`` shrinks shapes/iters for CI.
+``benchmarks.run`` imports and calls :func:`main` (full shapes).
+"""
+import time
+
 import jax
 import jax.numpy as jnp
 
 from .common import emit
+from .roofline import HBM, PEAK
 
 
-def main():
+def _time_us(fn, *args, iters=5):
+    out = jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _roofline_detail(flops, bytes_):
+    tc, tm = flops / PEAK, bytes_ / HBM
+    dom = "compute" if tc >= tm else "memory"
+    ai = flops / max(bytes_, 1)
+    return (f"tpu_compute_us={tc * 1e6:.2f} tpu_memory_us={tm * 1e6:.2f} "
+            f"bound={dom} ai={ai:.0f}")
+
+
+def _table_rows(smoke: bool):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as R
+    from repro.models.ssm import ssd_chunked
+
+    iters = 2 if smoke else 5
+    key = jax.random.PRNGKey(0)
+
+    # ---- attention prefill ------------------------------------------------
+    B, S, H, hd = (1, 256, 4, 64) if smoke else (1, 1024, 8, 128)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    ref = jax.jit(lambda q, k, v: R.attention_ref(q, k, v, causal=True))
+    t_pal = _time_us(lambda: kops.flash_attention(q, k, v, causal=True),
+                     iters=iters)
+    t_ref = _time_us(lambda: ref(q, k, v), iters=iters)
+    flops = 4.0 * B * S * S * H * hd * 0.5          # causal halves the tiles
+    bytes_ = 4 * B * S * H * hd * q.dtype.itemsize  # q,k,v in + o out
+    emit(f"table_kernels.attention_prefill_s{S}", f"{t_pal:.1f}",
+         f"ref_us={t_ref:.1f} interpret_ratio={t_pal / t_ref:.1f} "
+         + _roofline_detail(flops, bytes_))
+
+    # ---- flash decode at three KV lengths ---------------------------------
+    B, KV, G, hd = (2, 2, 2, 64) if smoke else (4, 2, 8, 128)
+    H = KV * G
+    kv_lens = (128, 256, 384) if smoke else (512, 2048, 8192)
+    for S in kv_lens:
+        ks = jax.random.split(jax.random.PRNGKey(S), 3)
+        qd = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+        pos = jnp.int32(S - 1)
+        refd = jax.jit(lambda q, k, v, p: R.decode_attention_ref(q, k, v, p))
+        t_pal = _time_us(lambda: kops.flash_decode(qd, kc, vc, pos),
+                         iters=iters)
+        t_ref = _time_us(lambda: refd(qd, kc, vc, pos), iters=iters)
+        flops = 4.0 * B * H * S * hd
+        bytes_ = 2 * B * KV * S * hd * kc.dtype.itemsize   # K+V cache read
+        emit(f"table_kernels.decode_kv{S}", f"{t_pal:.1f}",
+             f"ref_us={t_ref:.1f} interpret_ratio={t_pal / t_ref:.1f} "
+             + _roofline_detail(flops, bytes_))
+
+    # ---- SSD scan ---------------------------------------------------------
+    B, S, h, p = (1, 128, 2, 32) if smoke else (1, 512, 4, 64)
+    g, n = 1, 16 if smoke else 64
+    chunk = 32 if smoke else 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, g, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, g, n)) * 0.3
+    refs = jax.jit(lambda *a: ssd_chunked(*a, chunk),
+                   static_argnums=())
+    t_pal = _time_us(lambda: kops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk),
+                     iters=iters)
+    t_ref = _time_us(lambda: refs(x, dt, A, Bm, Cm), iters=iters)
+    # intra-chunk quadratic terms dominate: CB^T + L·x per chunk
+    flops = 4.0 * B * S * chunk * h * (n + p)
+    bytes_ = (x.size + Bm.size + Cm.size + x.size) * 4
+    emit(f"table_kernels.ssd_s{S}", f"{t_pal:.1f}",
+         f"ref_us={t_ref:.1f} interpret_ratio={t_pal / t_ref:.1f} "
+         + _roofline_detail(flops, bytes_))
+
+    # ---- rmsnorm ----------------------------------------------------------
+    B, S, d = (2, 128, 256) if smoke else (4, 512, 4096)
+    xx = jax.random.normal(key, (B, S, d))
+    sc = jnp.ones((d,))
+    refn = jax.jit(R.rmsnorm_ref)
+    t_pal = _time_us(lambda: kops.rmsnorm(xx, sc), iters=iters)
+    t_ref = _time_us(lambda: refn(xx, sc), iters=iters)
+    flops = 3.0 * xx.size
+    bytes_ = 2 * xx.size * xx.dtype.itemsize
+    emit(f"table_kernels.rmsnorm_d{d}", f"{t_pal:.1f}",
+         f"ref_us={t_ref:.1f} interpret_ratio={t_pal / t_ref:.1f} "
+         + _roofline_detail(flops, bytes_))
+
+
+def main(smoke: bool = False):
     from repro.kernels import ref as R
     from repro.kernels.flash_attention import (DEFAULT_BLOCK_K,
                                                DEFAULT_BLOCK_Q,
                                                flash_attention)
+    from repro.kernels.flash_decode import DEFAULT_PAGE, MIN_GROUP
     from repro.kernels.ssd_scan import ssd_scan
 
     hd = 128
@@ -33,6 +152,22 @@ def main():
         R.attention_ref(q, k, v))))
     emit("kernel.flash_attention.max_err_vs_ref", f"{err:.2e}", "interpret")
 
+    # flash-decode: one (G, PAGE) score tile + (G, hd) accum per grid step
+    vmem_fd = (MIN_GROUP * hd + 2 * DEFAULT_PAGE * hd
+               + MIN_GROUP * DEFAULT_PAGE + MIN_GROUP * (hd + 2)) * 4
+    emit("kernel.flash_decode.vmem_bytes", vmem_fd,
+         f"page={DEFAULT_PAGE} group={MIN_GROUP} hd={hd} "
+         f"(fits 16MiB VMEM: {vmem_fd < 16 << 20})")
+    ks = jax.random.split(key, 3)
+    from repro.kernels import ops as kops
+    qd = jax.random.normal(ks[0], (2, 8, 64))
+    kc = jax.random.normal(ks[1], (2, 2, 256, 64))
+    vc = jax.random.normal(ks[2], (2, 2, 256, 64))
+    errd = float(jnp.max(jnp.abs(
+        kops.flash_decode(qd, kc, vc, jnp.int32(200)) -
+        R.decode_attention_ref(qd, kc, vc, jnp.int32(200)))))
+    emit("kernel.flash_decode.max_err_vs_ref", f"{errd:.2e}", "interpret")
+
     chunk, p, n = 128, 64, 128
     vmem_ssd = (chunk * p + 2 * chunk * n + chunk * chunk + p * n) * 4
     emit("kernel.ssd_scan.vmem_bytes", vmem_ssd,
@@ -48,6 +183,12 @@ def main():
     emit("kernel.ssd_scan.max_err_vs_ref",
          f"{float(jnp.max(jnp.abs(y - yr))):.2e}", "interpret")
 
+    _table_rows(smoke)
+
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters (CI gate)")
+    main(smoke=ap.parse_args().smoke)

@@ -29,12 +29,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .chips import ChipGroup, ChipSpec
-from .profiler import (analytic_layer_profile, layer_param_count,
-                       offload_time, optimizer_step_time, update_time,
-                       LayerProfile)
+from .profiler import (analytic_layer_profile, apply_measured,
+                       layer_param_count, offload_time, optimizer_step_time,
+                       update_time, LayerProfile)
 from .schedules import ScheduleLike, get_schedule
 from ..models.config import ModelConfig
 
@@ -288,7 +288,8 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
              dp_sync: Optional[str] = None,
              dp_transport: Optional[str] = None,
              bucket_bytes: Optional[int] = None,
-             sync_overlap: Optional[float] = None) -> PlanCost:
+             sync_overlap: Optional[float] = None,
+             measured: Optional[Dict[str, dict]] = None) -> PlanCost:
     """§4.3.2 closed-form cost of a plan (+ the §10 exposed-sync term).
 
     ``plan.microbatches`` is the PACING replica's allocation: for plans
@@ -306,6 +307,13 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     calibration path for the Table 6 homogeneous baselines, whose
     measured frameworks overlap sync inside the last backward at finer
     granularity than the stage-level bucket-readiness rule models.
+
+    ``measured`` maps chip-spec name -> a ``measure_layer_profile``
+    result dict; matching stages get their analytic time fields
+    (:data:`~.profiler.MEASURED_TIME_FIELDS`) replaced by the measured
+    ones via :func:`~.profiler.apply_measured`, so search ranks plans
+    by what the chosen kernel backend actually executes.  Memory
+    fields stay analytic.
     """
     from .dataparallel.grad_sync import GRAD_SYNC_MODES
     dp_sync = dp_sync if dp_sync is not None else plan.dp_sync
@@ -325,6 +333,9 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     a = alpha if alpha is not None else sched.alpha(total_pp, b)
     profs = list(profiles) if profiles is not None else \
         stage_profiles(plan, cfg, seq_len)
+    if measured:
+        profs = [apply_measured(p, measured.get(s.group.spec.name, {}))
+                 for s, p in zip(plan.stages, profs)]
 
     t_comp, t_upd, exposed, mems, caps, off = [], [], [], [], [], []
     stage_offset = 0

@@ -167,34 +167,70 @@ def offload_time(chip: ChipSpec, cfg: ModelConfig, tp: int,
 # measured profiles (real-hardware path of the same auto-profiler API)
 # ---------------------------------------------------------------------------
 
-def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3
-                          ) -> Dict[str, float]:
+MEASURED_TIME_FIELDS = ("t_fwd", "t_bwd", "t_recomp", "tp_comm",
+                        "wgrad_frac")
+
+
+def apply_measured(prof: LayerProfile,
+                   meas: Optional[Dict[str, float]]) -> LayerProfile:
+    """Overlay wall-clock measured fields from
+    :func:`measure_layer_profile` onto an analytic :class:`LayerProfile`
+    — the single ``measured=`` preference point shared by
+    ``cost_model.evaluate`` and ``schedule.plan_to_schedule_inputs``, so
+    searched plans are ranked on the kernels that actually execute
+    whenever a chip has been profiled for real.  Fields absent from
+    ``meas`` keep their analytic values (memory accounting is always
+    analytic: byte counts are exact)."""
+    if not meas:
+        return prof
+    fields = {k: meas[k] for k in MEASURED_TIME_FIELDS if k in meas}
+    return dataclasses.replace(prof, **fields) if fields else prof
+
+
+def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3,
+                          backend: str = "auto") -> Dict[str, float]:
     """Wall-clock layer profile of the real JAX model on the local backend.
 
     This is what the auto-profiler runs per chip type on a real cluster; on
     CPU it is only used by tests (shape of the data, not absolute numbers).
 
+    ``backend`` selects the EXECUTING kernel path — ``"pallas"`` times
+    the Pallas kernels (interpret mode off-TPU), ``"einsum"`` the jnp
+    paths, ``"auto"`` whatever the model would really run here
+    (``kernels.ops.preferred_backend``).  Every timing below runs that
+    backend, so the profile prices the kernels that execute — not the
+    einsum stand-in the search used to be fed regardless of the flag.
+
+    Besides the block-level fwd/bwd, three things are timed per-kernel:
+    attention (flash vs einsum), rmsnorm (fused vs jnp), the SSD scan
+    for SSM/hybrid archs — plus ONE single-token decode step against a
+    KV/state cache (``t_decode``), the serving hot path the flash-decode
+    kernel covers.
+
     Besides the combined backward, dgrad (∂loss/∂input) and wgrad
     (∂loss/∂params) are timed SEPARATELY, giving a measured
     ``wgrad_frac = t_wgrad / (t_dgrad + t_wgrad)`` — the wall-clock
     counterpart of the analytic op-mix split the backward-split
-    schedules (zb_h1/zb_v) consume.  ``plan_to_schedule_inputs``
-    prefers a measured fraction over the analytic one when given
-    (ROADMAP item: measured per-stage wgrad fractions on real
-    hardware)."""
+    schedules (zb_h1/zb_v) consume.  ``plan_to_schedule_inputs`` /
+    ``cost_model.evaluate`` prefer every measured field over the
+    analytic one via :func:`apply_measured`."""
     import jax
     import jax.numpy as jnp
+    from ..kernels import ops as kops
     from ..models import transformer as tfm
     from ..models.config import reduced
 
+    if backend == "auto":
+        backend = kops.preferred_backend()
     small = reduced(cfg)
     key = jax.random.PRNGKey(0)
-    blk = tfm.init_block(key, small, "dense" if not small.is_moe else "moe")
-    x = jax.random.normal(key, (1, min(seq_len, 256), small.d_model),
-                          dtype=jnp.bfloat16)
+    kind = "dense" if not small.is_moe else "moe"
+    blk = tfm.init_block(key, small, kind)
+    S = min(seq_len, 256)
+    x = jax.random.normal(key, (1, S, small.d_model), dtype=jnp.bfloat16)
 
     fwd = jax.jit(lambda p, x: tfm.block_forward(
-        p, small, x, "dense" if not small.is_moe else "moe")[0])
+        p, small, x, kind, backend=backend)[0])
 
     def timed(fn, *args):
         jax.block_until_ready(fn(*args))          # compile + warm
@@ -215,6 +251,83 @@ def measure_layer_profile(cfg: ModelConfig, seq_len: int, *, iters: int = 3
     # slightly past either end.
     t_wgrad = max(t_bwd - t_dgrad, 0.0)
     frac = t_wgrad / t_bwd if t_bwd > 0 else 0.5
-    return {"t_fwd": t_fwd, "t_bwd": t_bwd, "t_recomp": t_fwd,
+
+    prof = {"t_fwd": t_fwd, "t_bwd": t_bwd, "t_recomp": t_fwd,
             "t_dgrad": t_dgrad, "t_wgrad": t_wgrad,
-            "wgrad_frac": min(max(frac, 0.05), 0.95)}
+            "wgrad_frac": min(max(frac, 0.05), 0.95),
+            "backend": backend}
+    prof.update(_measure_kernel_times(small, S, backend, timed))
+    prof["t_decode"] = _measure_decode_step(small, seq_len, backend, timed)
+    return prof
+
+
+def _measure_kernel_times(small: ModelConfig, S: int, backend: str,
+                          timed) -> Dict[str, float]:
+    """Per-kernel wall times on the requested backend: attention,
+    rmsnorm, and (for SSM/hybrid archs) the SSD scan.  These are the
+    hot-path primitives the Pallas kernels replace; per-kernel deltas
+    localize where a chip's measured profile diverges from the
+    analytic roofline."""
+    import jax
+    import jax.numpy as jnp
+    from ..kernels import ops as kops
+    from ..models import attention as attn_lib, layers
+
+    key = jax.random.PRNGKey(1)
+    out: Dict[str, float] = {}
+
+    H, hd = small.num_heads, small.head_dim
+    q, k, v = (jax.random.normal(kk, (1, S, H, hd), dtype=jnp.bfloat16)
+               for kk in jax.random.split(key, 3))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    if backend == "pallas":
+        attn = jax.jit(lambda q, k, v: kops.flash_attention(q, k, v))
+    else:
+        attn = jax.jit(lambda q, k, v: attn_lib.attend(
+            q, k, v, q_pos=pos, k_pos=pos, backend="einsum"))
+    out["t_attn"] = timed(attn, q, k, v)
+
+    xr = jax.random.normal(key, (S, small.d_model), dtype=jnp.bfloat16)
+    sc = jnp.ones((small.d_model,), jnp.bfloat16)
+    if backend == "pallas":
+        rn = jax.jit(lambda x, s: kops.rmsnorm(x, s))
+    else:
+        rn = jax.jit(lambda x, s: layers.apply_norm(
+            {"scale": s}, x, "rmsnorm"))
+    out["t_rmsnorm"] = timed(rn, xr, sc)
+
+    if small.family in ("ssm", "hybrid"):
+        from ..models.ssm import ssd_chunked
+        nh, p = small.ssm_nheads, small.ssm_headdim
+        g, n = small.ssm_ngroups, small.ssm_state
+        ks = jax.random.split(key, 5)
+        xs = jax.random.normal(ks[0], (1, S, nh, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, S, nh))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (1, S, g, n)) * 0.3
+        Cm = jax.random.normal(ks[4], (1, S, g, n)) * 0.3
+        chunk = min(small.ssm_chunk, S)
+        if backend == "pallas":
+            ssd = jax.jit(lambda *a: kops.ssd_scan(*a, chunk=chunk)[0])
+        else:
+            ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk)[0])
+        out["t_ssd"] = timed(ssd, xs, dt, A, Bm, Cm)
+    return out
+
+
+def _measure_decode_step(small: ModelConfig, seq_len: int, backend: str,
+                         timed) -> float:
+    """One single-token decode step (full reduced model against a warm
+    cache) on the requested backend — the serving hot path."""
+    import jax
+    import jax.numpy as jnp
+    from ..models import model as M
+    from ..training import serve_step as SS
+
+    cache_len = min(max(int(seq_len), 32), 1024)
+    step, _plan = SS.make_decode_step(small, cache_len, backend=backend)
+    params = M.init_params(small, jax.random.PRNGKey(0))
+    cache = SS.init_serve_cache(small, 1, cache_len)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    fn = jax.jit(lambda p, c, t: step(p, c, t, jnp.int32(cache_len - 1))[1])
+    return timed(fn, params, cache, tok)

@@ -61,9 +61,13 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
     ignore it.
 
     ``measured`` maps chip names to wall-clock profiles from
-    :func:`~repro.core.profiler.measure_layer_profile` — when a chip's
-    entry carries a ``wgrad_frac``, the MEASURED fraction is preferred
-    over the analytic op-mix split for that chip's stages (the real-
+    :func:`~repro.core.profiler.measure_layer_profile` — any time
+    field a chip's entry carries (``t_fwd``/``t_bwd``/``t_recomp``/
+    ``tp_comm``/``wgrad_frac``, see
+    :data:`~repro.core.profiler.MEASURED_TIME_FIELDS`) replaces the
+    analytic value for that chip's stages via
+    :func:`~repro.core.profiler.apply_measured`, so the replay runs on
+    what the chosen kernel backend actually executes (the real-
     hardware path of the auto-profiler API).
 
     ``update_includes_sync=False`` returns PURE optimizer-step update
@@ -78,11 +82,11 @@ def plan_to_schedule_inputs(plan, cfg, seq_len: int, *,
     profs = stage_profiles(plan, cfg, seq_len)
     measured = measured or {}
     t_fwd, t_bwd, t_upd, wfrac, tps, specs = [], [], [], [], [], []
-    from .profiler import optimizer_step_time, update_time
+    from .profiler import apply_measured, optimizer_step_time, update_time
     for s, prof in zip(plan.stages, profs):
         lps = s.layers_per_stage
-        meas = measured.get(s.group.spec.name, {})
-        wf = meas.get("wgrad_frac", prof.wgrad_frac)
+        prof = apply_measured(prof, measured.get(s.group.spec.name, {}))
+        wf = prof.wgrad_frac
         for _ in range(s.pp):
             f = lps * (prof.t_fwd + (prof.t_recomp if s.recompute else 0.0))
             bwd = lps * prof.t_bwd

@@ -4,6 +4,12 @@ Models call these through ``backend="pallas"``; on non-TPU hosts the kernels
 execute in interpret mode (same kernel body, Python evaluation) so the whole
 model path is testable on CPU.  Wrappers handle GQA expansion, sequence
 padding to block multiples, and dtype plumbing.
+
+Training kernels (``flash_attention``, ``ssd_scan``, ``rmsnorm``) carry a
+``custom_vjp``: forward runs the Pallas kernel, backward differentiates the
+``ref.py`` oracle (recompute-style, XLA-fused) — so ``jax.grad`` through a
+``backend="pallas"`` model works without a hand-written backward kernel.
+``flash_decode`` is inference-only and defines no VJP.
 """
 from __future__ import annotations
 
@@ -13,8 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from . import flash_attention as _fa
+from . import flash_decode as _fd
+from . import ref as _ref
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
+
+NEG_INF = _ref.NEG_INF
 
 
 def _is_tpu() -> bool:
@@ -22,6 +32,15 @@ def _is_tpu() -> bool:
         return jax.default_backend() == "tpu"
     except RuntimeError:  # pragma: no cover
         return False
+
+
+def preferred_backend() -> str:
+    """What ``backend="auto"`` should execute: the Pallas kernels on a
+    real TPU, the einsum/chunked jnp paths elsewhere (interpret-mode
+    Pallas is a CORRECTNESS tool, far too slow to be a CPU default).
+    The single probe point the model dispatch sites share — tests
+    monkeypatch this to steer ``auto`` without faking the jax backend."""
+    return "pallas" if _is_tpu() else "einsum"
 
 
 def _pad_seq(x, multiple, axis):
@@ -34,6 +53,29 @@ def _pad_seq(x, multiple, axis):
     return jnp.pad(x, widths), S
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa_core(q, k, v, causal, window, q_offset, bq, bk):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=bq, block_k=bk,
+                               interpret=not _is_tpu())
+
+
+def _fa_core_fwd(q, k, v, causal, window, q_offset, bq, bk):
+    return _fa_core(q, k, v, causal, window, q_offset, bq, bk), (q, k, v)
+
+
+def _fa_core_bwd(causal, window, q_offset, bq, bk, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_ref(q, k, v, causal=causal,
+                                           window=window,
+                                           q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+_fa_core.defvjp(_fa_core_fwd, _fa_core_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
     """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — expands GQA internally."""
@@ -44,26 +86,110 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
         v = jnp.repeat(v, rep, axis=2)
     bq = min(_fa.DEFAULT_BLOCK_Q, max(q.shape[1], 1))
     bk = min(_fa.DEFAULT_BLOCK_K, max(k.shape[1], 1))
+    if not causal:
+        # padded k rows would win the softmax (no causal bound masks
+        # them) — shrink the k block to a divisor of Sk instead of
+        # padding (non-causal callers: cross-attention, encoders)
+        while k.shape[1] % bk:
+            bk -= 1
     q, Sq = _pad_seq(q, bq, 1)
     k, Sk = _pad_seq(k, bk, 1)
     v, _ = _pad_seq(v, bk, 1)
-    # padded k rows must never win the softmax: mask via causal bounds is not
-    # enough for non-causal; rely on causal=True paths or exact multiples.
-    out = _fa.flash_attention(q, k, v, causal=causal, window=window,
-                              q_offset=q_offset, block_q=bq, block_k=bk,
-                              interpret=not _is_tpu())
+    # causal: padded k rows sit at positions > every real q position, so
+    # the causal bound masks them; padded q rows are sliced off below
+    out = _fa_core(q, k, v, causal, window, q_offset, bq, bk)
     return out[:, :Sq]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "ring",
+                                    "page_size"))
+def flash_decode(q, k, v, pos, *, window=0, softcap=0.0, ring=False,
+                 page_size=_fd.DEFAULT_PAGE):
+    """Single-token decode attention against the resident KV cache.
+
+    q: (B, 1, H, hd) or (B, H, hd) — the current token's query heads;
+    k/v: (B, KV, S, hd) cache layout (NOT transposed — the kernel
+    streams the cache in place); pos: traced scalar int32 position.
+    ``ring=True`` applies the sliding-window ring-buffer slot→position
+    mapping (long_500k).  Handles GQA grouping, sublane padding of
+    small groups, and padding S up to the page size (padded slots are
+    masked through the bias, so they can never win the softmax).
+    Returns (B, H, hd)."""
+    if q.ndim == 4:
+        q = q[:, 0]
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    gpad = (-G) % _fd.MIN_GROUP
+    if gpad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gpad), (0, 0)))
+
+    k_pos = _ref.decode_slot_positions(pos, S, ring=ring)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window:
+        valid = valid & (k_pos > pos - window)
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, :]         # (1, S)
+    bias = jnp.broadcast_to(bias, (B, S))
+    spad = (-S) % page_size
+    if spad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, spad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, spad)),
+                       constant_values=NEG_INF)
+    out = _fd.flash_decode(qg, k, v, bias, softcap=softcap,
+                           page_size=page_size, interpret=not _is_tpu())
+    return out[:, :, :G].reshape(B, H, hd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_core(x, dt, A, Bm, Cm, chunk):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=not _is_tpu())
+
+
+def _ssd_core_fwd(x, dt, A, Bm, Cm, chunk):
+    return _ssd_core(x, dt, A, Bm, Cm, chunk), (x, dt, A, Bm, Cm)
+
+
+def _ssd_core_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm = res
+    # backward through the sequential-scan oracle: same recurrence the
+    # kernel computes, so gradients are exact for the zero-state path
+    _, vjp = jax.vjp(lambda x, dt, A, Bm, Cm: _ref.ssd_ref(x, dt, A, Bm, Cm),
+                     x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_core.defvjp(_ssd_core_fwd, _ssd_core_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, initial_state=None):
     """Chunked SSD; signature mirrors models.ssm.ssd_chunked."""
     del initial_state  # kernel starts from zero state (prefill/train path)
-    y, fin = _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
-                           interpret=not _is_tpu())
-    return y, fin
+    return _ssd_core(x, dt, A, Bm, Cm, chunk)
+
+
+@jax.custom_vjp
+def _rn_core(x, scale):
+    return _rn.rmsnorm(x, scale, interpret=not _is_tpu())
+
+
+def _rn_core_fwd(x, scale):
+    return _rn_core(x, scale), (x, scale)
+
+
+def _rn_core_bwd(res, g):
+    x, scale = res
+    _, vjp = jax.vjp(_ref.rmsnorm_ref, x, scale)
+    return vjp(g)
+
+
+_rn_core.defvjp(_rn_core_fwd, _rn_core_bwd)
 
 
 @jax.jit
 def rmsnorm(x, scale):
-    return _rn.rmsnorm(x, scale, interpret=not _is_tpu())
+    return _rn_core(x, scale)

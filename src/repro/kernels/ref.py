@@ -30,6 +30,46 @@ def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
     return out.astype(q.dtype)
 
 
+def decode_slot_positions(pos, cache_len, *, ring=False):
+    """Position held by each cache slot at decode step ``pos``.
+
+    Linear cache: slot i holds position i.  Ring cache (sliding-window
+    buffer): slot i holds the latest p ≤ pos with p % cache_len == i —
+    slots not yet written come out negative and must be masked.  Shared
+    by the einsum decode path, the flash_decode wrapper and this oracle,
+    so the three can never disagree on ring semantics."""
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    if ring:
+        return pos - ((pos - idx) % cache_len)
+    return idx
+
+
+def decode_attention_ref(q, k, v, pos, *, window=0, softcap=0.0,
+                         ring=False):
+    """Single-query decode attention oracle (the ``flash_decode`` ground
+    truth).  q: (B, H, hd) — ONE query token per sequence; k/v:
+    (B, KV, S, hd) cache layout (kv head i serves q heads
+    [i·G, (i+1)·G)); pos: scalar int32 position of the query token.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    rep = H // KV
+    kk = jnp.repeat(k, rep, axis=1).astype(jnp.float32)    # (B, H, S, hd)
+    vv = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kk) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = decode_slot_positions(pos, S, ring=ring)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window:
+        valid = valid & (k_pos > pos - window)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vv)
+    return out.astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, Bm, Cm, initial_state=None):
     """Sequential (non-chunked) SSD recurrence — the simplest possible
     ground truth for the ssd_scan kernel AND for models/ssm.ssd_chunked.

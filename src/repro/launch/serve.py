@@ -1,7 +1,14 @@
 """Serving launcher: batched prefill + greedy decode loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2_780m --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --batch 4 --prompt-len 64 --gen 32 [--backend auto|einsum|pallas]
+
+``--backend`` picks the kernel path for both prefill and decode:
+``auto`` resolves to the Pallas kernels on TPU and the jnp paths
+elsewhere; ``pallas`` forces the kernels (interpret mode off-TPU — a
+correctness tool, not a fast path).  Decode reports per-step p50/p95
+latency and tokens/s so a kernel change is visible from the launcher
+output alone.
 """
 from __future__ import annotations
 
@@ -16,6 +23,8 @@ from ..data.pipeline import DataConfig, SyntheticTokens
 from ..models import model as M
 from ..training import serve_step as SS
 
+BACKENDS = ["auto", "einsum", "pallas"]
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -23,6 +32,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--backend", default="auto", choices=BACKENDS,
+                    help="kernel path: auto (pallas on TPU, jnp "
+                         "elsewhere), einsum, or pallas (forced; "
+                         "interpret mode off-TPU)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -31,19 +44,20 @@ def main():
     cfg = get_smoke_config(name) if args.smoke else get_config(name)
     total = args.prompt_len + args.gen
     print(f"serving {cfg.name}: batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
+          f"prompt={args.prompt_len} gen={args.gen} backend={args.backend}")
 
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     src = SyntheticTokens(cfg, DataConfig(batch_size=args.batch,
                                           seq_len=args.prompt_len))
     batch = jax.tree.map(jnp.asarray, src.next_batch())
 
-    decode, plan = SS.make_decode_step(cfg, total)
+    decode, plan = SS.make_decode_step(cfg, total, backend=args.backend)
     decode = jax.jit(decode)
 
     t0 = time.perf_counter()
     cache, logits, plen = M.prefill(params, cfg, batch,
-                                    cache_len=max(plan["cache_len"], total))
+                                    cache_len=max(plan["cache_len"], total),
+                                    backend=args.backend)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
     print(f"prefill: {t_prefill * 1e3:.1f} ms "
@@ -51,17 +65,29 @@ def main():
 
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     out = [tok]
-    t0 = time.perf_counter()
+    # warm the decode jit outside the timed loop so step times are
+    # steady-state, then time every step individually: the mean hides
+    # exactly the tail the kernel work targets
+    _ = jax.block_until_ready(decode(params, cache, tok, jnp.int32(plen)))
+    step_s = []
     pos = plen
     for _ in range(args.gen - 1):
+        t1 = time.perf_counter()
         logits, tok, cache = decode(params, cache, tok, jnp.int32(pos))
+        jax.block_until_ready(tok)
+        step_s.append(time.perf_counter() - t1)
         out.append(tok)
         pos += 1
-    jax.block_until_ready(tok)
-    t_dec = time.perf_counter() - t0
     gen = jnp.concatenate(out, axis=1)
-    print(f"decode: {t_dec * 1e3:.1f} ms "
-          f"({args.batch * (args.gen - 1) / max(t_dec, 1e-9):.0f} tok/s)")
+    if step_s:
+        srt = sorted(step_s)
+        p50 = srt[len(srt) // 2]
+        p95 = srt[min(len(srt) - 1, int(len(srt) * 0.95))]
+        tot = sum(step_s)
+        print(f"decode: {tot * 1e3:.1f} ms over {len(step_s)} steps — "
+              f"p50={p50 * 1e3:.2f} ms p95={p95 * 1e3:.2f} ms "
+              f"({args.batch * len(step_s) / max(tot, 1e-9):.0f} tok/s, "
+              f"{args.batch / max(p50, 1e-9):.0f} tok/s @p50)")
     print(f"generated[0][:16] = {gen[0, :16].tolist()}")
 
 

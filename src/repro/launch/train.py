@@ -5,7 +5,8 @@
         [--pipeline-parallel 4 --tensor-parallel 2 --data-parallel 2 \
          --schedule 1f1b --microbatches 4 --grad-sync reduce_scatter] \
         [--plan plan.json | --search A:2,B:2] \
-        [--ckpt-dir ckpts --ckpt-every 50] [--smoke]
+        [--ckpt-dir ckpts --ckpt-every 50] [--smoke] \
+        [--backend auto|einsum|pallas]
 
 Uses whatever devices exist (CPU/TPU); on a real TPU fleet the same flags
 drive the production mesh.  ``--smoke`` selects the reduced config family.
@@ -269,6 +270,15 @@ def main():
                          "one collective per leaf (saved/searched plans "
                          "carry their own bucket size and refuse this "
                          "flag)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "einsum", "pallas"],
+                    help="kernel path for the model math: auto (Pallas "
+                         "kernels on TPU, jnp einsum/chunked elsewhere), "
+                         "einsum (force jnp), pallas (force the kernels; "
+                         "interpret mode off-TPU — correctness tool, not "
+                         "a fast path). Applies to the GSPMD data-"
+                         "parallel path; the shard_map pipeline resolves "
+                         "backend='auto' per device.")
     ap.add_argument("--schedule", default=None,
                     choices=available_schedules(),
                     help="pipeline schedule (with --pipeline-parallel; "
@@ -327,7 +337,8 @@ def main():
         # no donation here: eagerly-initialized zeros/ones can alias the same
         # buffer across leaves (jnp constant caching), which XLA rejects for
         # donated args; the dry-run path (abstract inputs) does donate.
-        step_fn = jax.jit(make_train_step(cfg, opt, accum_steps=args.accum))
+        step_fn = jax.jit(make_train_step(cfg, opt, accum_steps=args.accum,
+                                          backend=args.backend))
 
         dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
                           seed=1234 + args.seed)

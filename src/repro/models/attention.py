@@ -153,11 +153,26 @@ def _attend_chunked(q, k, v, q_pos, k_pos, causal, window, prefix_len, scale,
 
 def attend(q, k, v, *, q_pos, k_pos, causal=True, window=0, prefix_len=0,
            softcap=0.0, backend="auto"):
-    """Full attention dispatch.  q:(B,Sq,H,hd), k/v:(B,Sk,H,hd)."""
+    """Full attention dispatch.  q:(B,Sq,H,hd), k/v:(B,Sk,H,hd).
+
+    ``backend="auto"`` resolves through ``kernels.ops.preferred_backend``:
+    the Pallas flash kernel on a real TPU, the einsum/chunked jnp paths
+    elsewhere (previously ``auto`` fell through to einsum/chunked even
+    on TPU, so the kernels only ran when callers passed an explicit
+    ``backend="pallas"`` nobody passed — and the profiler priced a model
+    nobody executed)."""
+    from ..kernels import ops as kops
+    if backend == "auto" and kops.preferred_backend() == "pallas":
+        backend = "pallas"
     scale = 1.0 / (q.shape[-1] ** 0.5)
     Sq, Sk = q.shape[1], k.shape[1]
+    if backend == "pallas" and (softcap or prefix_len):
+        # the prefill kernel expresses neither logit softcap nor a
+        # bidirectional prefix — route those archs to the jnp paths
+        # rather than silently dropping the mask/cap (DESIGN.md §11
+        # backend matrix); the DECODE kernel does support softcap.
+        backend = "einsum" if max(Sq, Sk) <= CHUNK_THRESHOLD else "chunked"
     if backend == "pallas":
-        from ..kernels import ops as kops
         return kops.flash_attention(q, k, v, causal=causal, window=window,
                                     q_offset=int(k_pos.shape[0] - q_pos.shape[0]))
     if backend == "einsum" or (backend == "auto" and max(Sq, Sk) <= CHUNK_THRESHOLD):
@@ -212,13 +227,18 @@ def prefill_into_cache(cache, k, v, start=0):
 
 
 def decode_self_attention(params, cfg, x, cache, pos, *, ring=False,
-                          rope=True, window=0):
+                          rope=True, window=0, backend="auto"):
     """One-token decode step.
 
     x: (B, 1, d); pos: scalar int32 — current position (same for the batch).
     cache: dict(k,v) with layout (B, KV, S_cache, hd).
+    ``backend="pallas"`` (or ``"auto"`` on TPU) routes the attention to
+    the paged ``flash_decode`` kernel, which streams the cache in place;
+    both paths keep the cache layout resident — transposing a 32k cache
+    per layer would copy gigabytes per step.
     Returns (out (B,1,d), new_cache).
     """
+    from ..kernels import ops as kops
     B = x.shape[0]
     hd = cfg.head_dim
     positions = jnp.full((1,), pos, dtype=jnp.int32)
@@ -230,20 +250,24 @@ def decode_self_attention(params, cfg, x, cache, pos, *, ring=False,
     new_k = jax.lax.dynamic_update_slice(cache["k"], kc, (0, 0, slot, 0))
     new_v = jax.lax.dynamic_update_slice(cache["v"], vc, (0, 0, slot, 0))
 
-    # positions held in each cache slot
-    idx = jnp.arange(S_cache, dtype=jnp.int32)
-    if ring:
-        # slot i holds position: the latest p <= pos with p % S == i
-        k_pos = pos - ((pos - idx) % S_cache)
-    else:
-        k_pos = idx
-    valid = k_pos <= pos
+    if backend == "auto" and kops.preferred_backend() == "pallas":
+        backend = "pallas"
+    if backend == "pallas":
+        out = kops.flash_decode(q[:, 0], new_k, new_v, pos, window=window,
+                                softcap=cfg.attn_logit_softcap or 0.0,
+                                ring=ring)
+        out = out.reshape(B, 1, cfg.num_heads * hd) @ params["wo"]
+        return out, {"k": new_k, "v": new_v}
+
+    # positions held in each cache slot (shared ring semantics with the
+    # flash_decode wrapper and its oracle — kernels/ref.py)
+    from ..kernels.ref import decode_slot_positions
+    k_pos = decode_slot_positions(pos, S_cache, ring=ring)
+    valid = (k_pos >= 0) & (k_pos <= pos)
     if window:
         valid = valid & (k_pos > pos - window)
     bias = jnp.where(valid, 0.0, NEG_INF)[None, :]          # (1, S_cache)
 
-    # attend directly in cache layout (B, KV, S, hd) — transposing a 32k
-    # cache per layer would copy gigabytes per step
     rep = cfg.num_heads // cfg.num_kv_heads
     kk = jnp.repeat(new_k, rep, axis=1) if rep > 1 else new_k  # (B,H,S,hd)
     vv = jnp.repeat(new_v, rep, axis=1) if rep > 1 else new_v

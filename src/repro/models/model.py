@@ -348,9 +348,11 @@ def prefill(params, cfg, batch, cache_len: int, *, ring: bool = False,
 
 
 def decode_step(params, cfg, tokens, cache, pos, *, ring: bool = False,
-                window: int = 0):
+                window: int = 0, backend: str = "auto"):
     """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position of
-    this token.  Returns (logits (B, V), new cache)."""
+    this token.  ``backend`` routes the per-layer attention to the paged
+    ``flash_decode`` kernel (``"pallas"``, or ``"auto"`` on TPU) or the
+    einsum cache path.  Returns (logits (B, V), new cache)."""
     x = layers.embed_tokens(params["embed"], tokens)
     x = constrain(x, "batch", None, None)
 
@@ -373,7 +375,7 @@ def decode_step(params, cfg, tokens, cache, pos, *, ring: bool = False,
             x, ssm_c2 = jax.lax.scan(sstep, x, (gp, gc_ssm))
             x, attn_c2 = tfm.block_decode(params["shared_attn"], cfg, x,
                                           gc_attn, pos, "dense", ring=ring,
-                                          window=window)
+                                          window=window, backend=backend)
             return x, (ssm_c2, attn_c2)
         x, (ssm_c, attn_c) = jax.lax.scan(
             group, x, (params["blocks"], cache["ssm"], cache["attn"]))
@@ -384,7 +386,8 @@ def decode_step(params, cfg, tokens, cache, pos, *, ring: bool = False,
         def step(x, inp):
             p, c, ekv = inp
             x, c2 = tfm.block_decode(p, cfg, x, c, pos, "dec_cross",
-                                     ring=ring, window=window, enc_kv=ekv)
+                                     ring=ring, window=window, enc_kv=ekv,
+                                     backend=backend)
             return x, c2
         x, self_c = jax.lax.scan(
             step, x, (params["dec_blocks"], cache["self"], cache["cross"]))
@@ -393,7 +396,8 @@ def decode_step(params, cfg, tokens, cache, pos, *, ring: bool = False,
         def step(x, inp):
             p, c = inp
             x, c2 = tfm.block_decode(p, cfg, x, c, pos, _block_kind(cfg),
-                                     ring=ring, window=window)
+                                     ring=ring, window=window,
+                                     backend=backend)
             return x, c2
         x, new_cache = jax.lax.scan(step, x, (params["blocks"], cache))
 

@@ -172,8 +172,13 @@ def mamba2_forward(params, cfg, u, *, initial_state=None, backend="auto"):
     xh = constrain(xh, "batch", None, "heads", None)
 
     chunk = min(cfg.ssm_chunk, S)
+    from ..kernels import ops as kops
+    if backend == "auto" and initial_state is None \
+            and kops.preferred_backend() == "pallas":
+        # auto picks the Pallas SSD kernel on TPU (the kernel starts
+        # from zero state, so a carried initial_state stays on jnp)
+        backend = "pallas"
     if backend == "pallas":
-        from ..kernels import ops as kops
         y, final = kops.ssd_scan(xh, dt, A, Bg, Cg, chunk=chunk,
                                  initial_state=initial_state)
     else:

@@ -116,7 +116,7 @@ def run_stacked(blocks: PyTree, cfg, x, kind: str, *, remat=True,
 # ---------------------------------------------------------------------------
 
 def block_decode(p, cfg, x, cache, pos, kind: str, *, ring=False, window=0,
-                 enc_kv=None):
+                 enc_kv=None, backend="auto"):
     if kind == "ssm":
         h = layers.apply_norm(p["ln1"], x, cfg.norm)
         y, new_cache = ssm_lib.mamba2_decode_step(p["ssm"], cfg, h, cache)
@@ -124,11 +124,13 @@ def block_decode(p, cfg, x, cache, pos, kind: str, *, ring=False, window=0,
     h = layers.apply_norm(p["ln1"], x, cfg.norm)
     rope = cfg.family != "audio"
     a, new_cache = attention.decode_self_attention(
-        p["attn"], cfg, h, cache, pos, ring=ring, rope=rope, window=window)
+        p["attn"], cfg, h, cache, pos, ring=ring, rope=rope, window=window,
+        backend=backend)
     x = x + a
     if kind == "dec_cross":
         h = layers.apply_norm(p["ln3"], x, cfg.norm)
-        x = x + attention.cross_attention(p["xattn"], cfg, h, enc_kv)
+        x = x + attention.cross_attention(p["xattn"], cfg, h, enc_kv,
+                                          backend)
     h = layers.apply_norm(p["ln2"], x, cfg.norm)
     if kind == "moe":
         y, _ = moe_lib.moe_block(p["moe"], cfg, h)
@@ -138,7 +140,7 @@ def block_decode(p, cfg, x, cache, pos, kind: str, *, ring=False, window=0,
 
 
 def run_stacked_decode(blocks, cfg, x, caches, pos, kind: str, *, ring=False,
-                       window=0, enc_kv=None):
+                       window=0, enc_kv=None, backend="auto"):
     """Scan over (stacked blocks, stacked caches)."""
 
     def step(x, inp):
@@ -147,7 +149,7 @@ def run_stacked_decode(blocks, cfg, x, caches, pos, kind: str, *, ring=False,
         else:
             (p, c), ekv = inp, None
         x, c2 = block_decode(p, cfg, x, c, pos, kind, ring=ring,
-                             window=window, enc_kv=ekv)
+                             window=window, enc_kv=ekv, backend=backend)
         return x, c2
 
     xs = (blocks, caches, enc_kv) if enc_kv is not None else (blocks, caches)

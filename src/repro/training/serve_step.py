@@ -61,14 +61,15 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int, *, backend="auto"):
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, seq_len: int):
+def make_decode_step(cfg: ModelConfig, seq_len: int, *, backend="auto"):
     plan = cache_plan(cfg, seq_len)
 
     def serve_step(params, cache, tokens, pos):
         """tokens: (B, 1); pos: scalar int32 current position."""
         logits, new_cache = M.decode_step(params, cfg, tokens, cache, pos,
                                           ring=plan["ring"],
-                                          window=plan["window"])
+                                          window=plan["window"],
+                                          backend=backend)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return logits, next_tok, new_cache
 

@@ -352,6 +352,48 @@ def test_plan_to_schedule_inputs_prefers_measured_wgrad():
     assert wf[1] == wf_analytic[1]             # chip B: analytic kept
 
 
+def test_measure_layer_profile_per_kernel_backends():
+    """The profiler times the kernels the chosen backend executes:
+    per-kernel rows + a decode-step time, tagged with the resolved
+    backend, and the pallas run is a distinct measurement."""
+    from repro.configs import get_smoke_config
+    from repro.core.profiler import measure_layer_profile
+    cfg = get_smoke_config("granite_8b")
+    out = {be: measure_layer_profile(cfg, 64, iters=1, backend=be)
+           for be in ("einsum", "pallas")}
+    for be, m in out.items():
+        assert m["backend"] == be
+        for key in ("t_attn", "t_rmsnorm", "t_decode"):
+            assert key in m and m[key] > 0, (be, key, m)
+    assert out["pallas"] != out["einsum"]
+
+
+def test_evaluate_and_replay_consume_measured_times():
+    """The full measured overlay (not just wgrad_frac) reaches both
+    rankers: evaluate() reprices the plan and plan_to_schedule_inputs
+    feeds the replay the measured per-stage times."""
+    from repro.configs import get_smoke_config
+    from repro.core.schedule import plan_to_schedule_inputs, simulate_plan
+    cfg = get_smoke_config("granite_8b")
+    plan = _plan()
+    meas = {"A": {"t_fwd": 5e-3, "t_bwd": 9e-3, "wgrad_frac": 0.25}}
+
+    base = evaluate(plan, cfg, 128, 1e6)
+    mod = evaluate(plan, cfg, 128, 1e6, measured=meas)
+    assert mod.iter_time > base.iter_time      # measured times dominate
+
+    tf0, *_ = plan_to_schedule_inputs(plan, cfg, 128)
+    tf1, tb1, _, _, _, wf1 = plan_to_schedule_inputs(plan, cfg, 128,
+                                                     measured=meas)
+    lps = plan.stages[0].layers_per_stage
+    assert tf1[0] == pytest.approx(lps * 5e-3)   # chip A: measured t_fwd
+    assert tb1[0] == pytest.approx(lps * 9e-3)
+    assert tf1[-1] == tf0[-1]                    # chip B: analytic kept
+    r = simulate_plan(plan, cfg, 128, measured=meas)
+    r0 = simulate_plan(plan, cfg, 128)
+    assert r.makespan > r0.makespan
+
+
 # ---------------------------------------------------------------------------
 # launcher refusal + SPMD e2e (subprocess; forced virtual devices)
 # ---------------------------------------------------------------------------

@@ -110,6 +110,144 @@ def test_rmsnorm_kernel(rows, d, dtype):
     assert err < TOL[dtype]
 
 
+# ---------------------------------------------------------------------------
+# flash-decode: single-query paged attention vs its oracle
+# ---------------------------------------------------------------------------
+
+def _decode_inputs(key, B, H, kv, S, hd=64):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, kv, S, hd))
+    v = jax.random.normal(ks[2], (B, kv, S, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("kv", [1, 2, 8])        # GQA 8:1, 4:1, MHA
+@pytest.mark.parametrize("S", [96, 128, 200, 300])
+def test_flash_decode_oracle(kv, S):
+    """KV lengths straddle the 128 page boundary and the lane tile
+    (96/200/300 are not multiples of 128 — exercises ``_pad_seq`` +
+    NEG_INF bias padding); kv sweeps the GQA group fold."""
+    from repro.kernels.ref import decode_attention_ref
+    q, k, v = _decode_inputs(jax.random.PRNGKey(S + kv), 2, 8, kv, S)
+    for pos in (S - 1, S // 2):                  # full + partially-written
+        out = ops.flash_decode(q, k, v, jnp.int32(pos))
+        ref = decode_attention_ref(q, k, v, jnp.int32(pos))
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-5, (kv, S, pos)
+
+
+@pytest.mark.parametrize("kwargs,pos", [
+    (dict(window=64), 199),                      # sliding window
+    (dict(softcap=30.0), 199),                   # gemma-style logit cap
+    (dict(window=200, ring=True), 237),          # ring buffer, wrapped
+])
+def test_flash_decode_variants(kwargs, pos):
+    from repro.kernels.ref import decode_attention_ref
+    S = 200 if not kwargs.get("ring") else 200
+    q, k, v = _decode_inputs(jax.random.PRNGKey(pos), 2, 8, 2, S)
+    out = ops.flash_decode(q, k, v, jnp.int32(pos), **kwargs)
+    ref = decode_attention_ref(q, k, v, jnp.int32(pos), **kwargs)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_flash_decode_prefill_consistency():
+    """Decode at position p == row p of the full prefill attention: the
+    kernel's paged/bias masking agrees with the causal prefill mask."""
+    B, H, kv, S, hd = 2, 8, 2, 130, 64
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, kv, hd))
+    v = jax.random.normal(ks[2], (B, S, kv, hd))
+    full = attention_ref(q, jnp.repeat(k, H // kv, 2),
+                         jnp.repeat(v, H // kv, 2), causal=True)
+    kc, vc = k.swapaxes(1, 2), v.swapaxes(1, 2)   # cache layout (B,KV,S,hd)
+    for p in (0, 64, S - 1):
+        out = ops.flash_decode(q[:, p], kc, vc, jnp.int32(p))
+        assert float(jnp.max(jnp.abs(out - full[:, p]))) < 1e-5, p
+
+
+def test_pallas_kernels_custom_vjp():
+    """jax.grad through the Pallas wrappers == grad of the oracle (the
+    custom_vjp backward differentiates ref.py, so pallas models train)."""
+    key = jax.random.PRNGKey(4)
+    q, k, v = (jax.random.normal(kk, (1, 128, 2, 64))
+               for kk in jax.random.split(key, 3))
+    g_pal = jax.grad(lambda q: ops.flash_attention(q, k, v).sum())(q)
+    g_ref = jax.grad(lambda q: attention_ref(q, k, v).sum())(q)
+    assert float(jnp.max(jnp.abs(g_pal - g_ref))) < 1e-4
+
+    x = jax.random.normal(key, (32, 256))
+    s = jnp.ones((256,))
+    gx = jax.grad(lambda x: ops.rmsnorm(x, s).sum())(x)
+    gr = jax.grad(lambda x: rmsnorm_ref(x, s).sum())(x)
+    assert float(jnp.max(jnp.abs(gx - gr))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# backend="auto" resolution (the probe the dispatch sites share)
+# ---------------------------------------------------------------------------
+
+def test_preferred_backend_probe(monkeypatch):
+    monkeypatch.setattr(ops, "_is_tpu", lambda: True)
+    assert ops.preferred_backend() == "pallas"
+    monkeypatch.setattr(ops, "_is_tpu", lambda: False)
+    assert ops.preferred_backend() == "einsum"
+
+
+def test_auto_resolves_to_pallas_on_tpu(monkeypatch):
+    """Regression: ``auto`` must reach the kernels when the probe says
+    TPU (it used to fall through to einsum everywhere).  Monkeypatching
+    ``preferred_backend`` — NOT ``_is_tpu`` — keeps interpret mode on,
+    so the kernels still execute on CPU."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import attention as A
+    calls = []
+    real = ops.flash_decode
+    monkeypatch.setattr(ops, "preferred_backend", lambda: "pallas")
+    monkeypatch.setattr(
+        ops, "flash_decode",
+        lambda *a, **kw: (calls.append(1), real(*a, **kw))[1])
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"),
+                              dtype="float32")
+    params = A.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    cache = A.init_kv_cache(cfg, 2, 64, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, cfg.d_model))
+    out, _ = A.decode_self_attention(params, cfg, x, cache, jnp.int32(5),
+                                     backend="auto")
+    assert calls, "auto did not route decode to the pallas kernel"
+    ref, _ = A.decode_self_attention(params, cfg, x, cache, jnp.int32(5),
+                                     backend="einsum")
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end decode: pallas backend == einsum cache path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite_8b", "zamba2_2p7b"])
+def test_decode_step_pallas_matches_einsum(arch):
+    import dataclasses
+    from conftest import make_batch
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = make_batch(cfg, key, 2, 16)
+    outs = {}
+    for be in ("einsum", "pallas"):
+        cache, logits, plen = M.prefill(params, cfg, batch, cache_len=32,
+                                        backend=be)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        step, _ = M.decode_step(params, cfg, tok, cache, jnp.int32(plen),
+                                backend=be)
+        outs[be] = step
+    err = float(jnp.max(jnp.abs(outs["pallas"] - outs["einsum"])))
+    assert err < 1e-3, err
+
+
 def test_model_attention_pallas_backend_matches_auto():
     """End-to-end: model self-attention with backend='pallas' == jnp path."""
     import dataclasses
