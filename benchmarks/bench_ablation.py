@@ -122,12 +122,12 @@ def main(argv=None):
     emit("table9.uniform_1f1b", f"{run(the_plan=uni) / full:.1%}",
          f"paper: {PAPER['uniform']}% (tp=4 everywhere, equal layers/stage)")
 
-    # tp ablation: force ONE tp degree across every stage — the only
-    # shape the 2-D (pipe, tp) SPMD runtime can execute (DESIGN.md §8;
-    # non-uniform per-stage tp stays cost-model-only) — vs the searched
-    # per-stage tp.  Keeping pp and the layer split fixed changes the
-    # chip budget, so these are WHAT-IF rows (the chip counts are in the
-    # detail column), not feasible same-cluster alternatives.
+    # tp ablation: force ONE tp degree across every stage — what a
+    # uniform framework would run — vs the searched per-stage tp, which
+    # the grouped stage runtime now executes for real (DESIGN.md §12).
+    # Keeping pp and the layer split fixed changes the chip budget, so
+    # these are WHAT-IF rows (the chip counts are in the detail column),
+    # not feasible same-cluster alternatives.
     tps = sorted({s.tp for s in plan.stages})
     for tp_f in sorted({1, max(tps)}):
         forced = ParallelPlan(
@@ -138,6 +138,101 @@ def main(argv=None):
              f"what-if uniform tp={tp_f} vs searched per-stage tp={tps}, "
              f"same pp/layer split — uses {forced.total_chips} chips vs "
              f"the plan's {plan.total_chips}")
+
+    # §5 boundary resharding: the collective the grouped runtime now
+    # executes at every tp-differing stage boundary (DESIGN.md §12) —
+    # naive vs sr_ag wall time per boundary of the Exp-C-1 replay plan,
+    # and the HLO-measured cross-stage payload vs the analytic byte
+    # model the choice rests on.
+    from repro.core import resharding as RS
+    act = 4096 * cfg.d_model * 2              # one microbatch row, bf16
+    bounds = [(i, plan.stages[i], plan.stages[i + 1])
+              for i in range(len(plan.stages) - 1)
+              if plan.stages[i].tp != plan.stages[i + 1].tp]
+    rtag = ""
+    if not bounds:
+        # the searched plan came back tp-uniform: replay the tp-whatif
+        # asymmetry as a boundary between the two chip islands instead
+        s0, s1 = plan.stages[0], plan.stages[-1]
+        bounds = [(0, dataclasses.replace(s0, tp=max(tps + [4])),
+                   dataclasses.replace(s1, tp=1))]
+        rtag = " (what-if: searched plan is tp-uniform)"
+    for i, src, dst in bounds:
+        kw = dict(nic_bw=src.group.spec.nic_bw,
+                  intra_bw=dst.group.spec.intra_node_bw)
+        t_nv = RS.boundary_time(act, src.tp, dst.tp, strategy="naive", **kw)
+        t_sr = RS.boundary_time(act, src.tp, dst.tp, strategy="sr_ag", **kw)
+        chosen = RS.choose_strategy(src.tp, dst.tp, **kw)
+        emit(f"table_resharding.boundary{i}.naive", f"{t_nv * 1e3:.3f}ms",
+             f"tp {src.tp}->{dst.tp} "
+             f"({src.group.spec.name}->{dst.group.spec.name}), "
+             f"act={act / 2 ** 20:.1f}MiB/microbatch{rtag}")
+        emit(f"table_resharding.boundary{i}.sr_ag", f"{t_sr * 1e3:.3f}ms",
+             f"speedup {t_nv / t_sr:.2f}x; chosen={chosen} — the strategy "
+             f"from_plan bakes into the executed spec{rtag}")
+    # measured vs analytic bytes: lower both reshard schedules on
+    # virtual devices (subprocess, so the forced device count never
+    # leaks) and read the cross-stage collective_permute payload out of
+    # the StableHLO — the byte model the strategy choice rests on,
+    # asserted against what the compiler actually moves
+    # (cf. tests/test_resharding_exec.py).
+    import os
+    import re
+    import subprocess
+    import textwrap
+
+    from repro.core.resharding import naive_cost, sr_ag_cost
+
+    pipe, tp, rows, feat = 2, 4, 8, 512
+    script = textwrap.dedent(f"""
+        from repro.launch.hostdevices import force_host_device_count
+        force_host_device_count({pipe * tp})
+        import re
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.resharding import reshard
+        mesh = jax.make_mesh(({pipe}, {tp}), ("pipe", "tp"))
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              ({pipe}, {rows}, {feat}))
+        x = jax.device_put(x, NamedSharding(mesh, P("pipe", None, "tp")))
+        for strat in ("naive", "sr_ag"):
+            txt = jax.jit(lambda v: reshard(v, mesh, strategy=strat)
+                          ).lower(x).as_text()
+            (dims,) = re.findall(
+                r'collective_permute"[^\\n]*?tensor<([0-9x]+)xf32>',
+                txt)
+            elems = 1
+            for d in dims.split("x"):
+                elems *= int(d)
+            print(f"BYTES {{strat}} {{elems * 4}}")
+    """)
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300, env=env)
+    if r.returncode != 0:
+        emit("table_resharding.measured_bytes", "n/a",
+             f"virtual-device lowering failed: {r.stderr[-200:]}")
+    else:
+        measured = dict(
+            (m.group(1), int(m.group(2)))
+            for m in re.finditer(r"BYTES (\w+) (\d+)", r.stdout))
+        # per-rank payloads: naive sends the FULL per-stage activation
+        # from every source rank; sr_ag sends each rank's 1/tp shard
+        # (one activation copy total, = the closed form's cross_bytes)
+        act_f32 = rows * feat * 4            # one stage's activation
+        analytic = {"naive": naive_cost(act_f32, tp, tp).cross_bytes,
+                    "sr_ag": sr_ag_cost(act_f32, tp, tp).cross_bytes // tp}
+        for strat in ("naive", "sr_ag"):
+            ok = measured[strat] == analytic[strat]
+            emit(f"table_resharding.measured_bytes.{strat}",
+                 f"{measured[strat]}B",
+                 f"per-rank cross-stage payload from StableHLO vs "
+                 f"analytic {analytic[strat]}B — "
+                 f"{'MATCH' if ok else 'MISMATCH'} "
+                 f"(pipe={pipe} tp={tp} act={act_f32}B f32)")
 
     # dp ablation (DESIGN.md §9).  (a) Gradient-sync mode: per-bucket
     # byte accounting of the pacing stage's gradient volume under the

@@ -69,6 +69,10 @@ def main():
     print(f"\nHeteroAuto plan ({r.search_time_s:.2f}s, "
           f"{r.evaluated} configs):")
     print(" ", r.plan.describe())
+    # which shard_map path launch/train.py --plan would take: "uniform-tp"
+    # (2-D pipe×tp mesh), "grouped-tp" (DESIGN.md §12 stage groups), or
+    # "refused: ..." for the inexpressible layouts
+    print(f"  runtime: {r.runtime}")
     if args.save_plan:
         with open(args.save_plan, "w") as f:
             json.dump(r.plan.to_dict(), f, indent=2)

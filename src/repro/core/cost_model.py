@@ -179,6 +179,13 @@ class PlanCost:
     exposed_sync: List[float] = dataclasses.field(default_factory=list)
     dp_transport: str = "device_rdma"
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    # per tp-differing stage-TYPE boundary: the reshard strategy the
+    # grouped runtime will execute there ("none" for equal-tp
+    # boundaries) and, per stage TYPE, the per-microbatch boundary
+    # reshard time charged to the DOWNSTREAM stage (the stage whose
+    # devices wait on the incoming all-gather) — DESIGN.md §12
+    reshard: List[str] = dataclasses.field(default_factory=list)
+    t_reshard: List[float] = dataclasses.field(default_factory=list)
 
 
 def stage_profiles(plan: ParallelPlan, cfg: ModelConfig, seq_len: int
@@ -289,7 +296,8 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
              dp_transport: Optional[str] = None,
              bucket_bytes: Optional[int] = None,
              sync_overlap: Optional[float] = None,
-             measured: Optional[Dict[str, dict]] = None) -> PlanCost:
+             measured: Optional[Dict[str, dict]] = None,
+             resharding: Optional[str] = None) -> PlanCost:
     """§4.3.2 closed-form cost of a plan (+ the §10 exposed-sync term).
 
     ``plan.microbatches`` is the PACING replica's allocation: for plans
@@ -314,6 +322,16 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     ones via :func:`~.profiler.apply_measured`, so search ranks plans
     by what the chosen kernel backend actually executes.  Memory
     fields stay analytic.
+
+    Every tp-differing stage-TYPE boundary additionally pays the §5
+    reshard collective the grouped runtime executes there
+    (``resharding.boundary_time`` × microbatches, charged to the
+    downstream stage whose devices wait on the incoming gather).
+    ``resharding=`` forces one strategy for every boundary; the default
+    ``None`` prices each boundary at the strategy
+    :func:`resharding.choose_strategy` picks — the same per-boundary
+    argmin ``heteropp.from_plan`` bakes into the executed spec, so the
+    priced and executed collectives cannot drift apart (DESIGN.md §12).
     """
     from .dataparallel.grad_sync import GRAD_SYNC_MODES
     dp_sync = dp_sync if dp_sync is not None else plan.dp_sync
@@ -387,10 +405,34 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
         off.append(is_off)
         stage_offset += s.pp
 
+    # ---- §5 boundary resharding between tp-differing stage TYPES ----
+    # Stages inside one type share a tp, so only type boundaries can
+    # differ.  Each microbatch pays the boundary once; the downstream
+    # stage's devices block on the incoming gather, so the term joins
+    # that stage's pacing candidate.
+    from . import resharding as RS
+    act_bytes = seq_len * cfg.d_model * 2          # bf16 boundary tensor
+    reshard_strats: List[str] = []
+    t_resh = [0.0] * len(plan.stages)
+    for i in range(len(plan.stages) - 1):
+        src, dst = plan.stages[i], plan.stages[i + 1]
+        if src.tp == dst.tp:
+            reshard_strats.append("none")
+            continue
+        strat = resharding if resharding is not None else \
+            RS.choose_strategy(src.tp, dst.tp,
+                               nic_bw=src.group.spec.nic_bw,
+                               intra_bw=dst.group.spec.intra_node_bw)
+        reshard_strats.append(strat)
+        t_resh[i + 1] += RS.boundary_time(
+            act_bytes, src.tp, dst.tp, strategy=strat,
+            nic_bw=src.group.spec.nic_bw,
+            intra_bw=dst.group.spec.intra_node_bw)
+
     sum_comp = sum(tc * s.pp for tc, s in zip(t_comp, plan.stages))
     iter_time, pacing = 0.0, 0
     for i, s in enumerate(plan.stages):
-        t = b * t_comp[i] + t_upd[i] + exposed[i] + \
+        t = b * (t_comp[i] + t_resh[i]) + t_upd[i] + exposed[i] + \
             a * (sum_comp - t_comp[i])
         if t > iter_time:
             iter_time, pacing = t, i
@@ -401,7 +443,7 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
     tgs = gbs_tokens / (iter_time * plan.total_chips) if iter_time > 0 else 0.0
     return PlanCost(iter_time, tgs, feasible, mems, caps, t_comp, t_upd,
                     bubble, off, a, sched.name, dp_sync, exposed,
-                    dp_transport, bucket_bytes)
+                    dp_transport, bucket_bytes, reshard_strats, t_resh)
 
 
 # ---------------------------------------------------------------------------

@@ -71,10 +71,31 @@ class SearchResult:
     evaluated: int
     search_time_s: float
     stage1_dp: Optional[int] = None
+    # how the SPMD runtime would execute the winning plan: "uniform-tp",
+    # "grouped-tp" (non-uniform per-stage tp via the DESIGN.md §12
+    # stage-group runtime), or "refused: <reason>" for the layouts the
+    # runtime genuinely cannot express (chunked schedule × non-uniform
+    # tp, non-uniform batch domains, ...)
+    runtime: str = ""
 
     @property
     def tgs(self) -> float:
         return self.cost.tgs if self.cost else 0.0
+
+
+def runtime_path(plan: Optional[ParallelPlan]) -> str:
+    """Classify how ``heteropp`` would execute ``plan`` (see
+    :attr:`SearchResult.runtime`).  Asymmetric-tp plans are executable
+    since the grouped stage runtime landed — only genuinely
+    inexpressible layouts report ``refused``."""
+    if plan is None:
+        return ""
+    from . import heteropp as HP
+    try:
+        spec = HP.from_plan(plan, execute_tp=True, execute_dp=True)
+    except ValueError as e:
+        return f"refused: {e}"
+    return "grouped-tp" if spec.grouped else "uniform-tp"
 
 
 def _pow2s_upto(n: int) -> List[int]:
@@ -324,7 +345,8 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
             groups = saved_groups
 
     return SearchResult(best_plan, best_cost, evaluated,
-                        time.perf_counter() - t0, stage1_dp)
+                        time.perf_counter() - t0, stage1_dp,
+                        runtime=runtime_path(best_plan))
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +402,8 @@ def homogeneous_baseline(group: ChipGroup, cfg: ModelConfig, gbs_tokens: int,
         if best_cost is None or cost.iter_time < best_cost.iter_time:
             best_plan, best_cost = plan, cost
     return SearchResult(best_plan, best_cost, evaluated,
-                        time.perf_counter() - t0)
+                        time.perf_counter() - t0,
+                        runtime=runtime_path(best_plan))
 
 
 def hetero_speedup_ratio(hetero: SearchResult,

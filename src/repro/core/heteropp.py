@@ -44,6 +44,18 @@ schedule/runtime contract):
 Non-uniform layer counts: global chunk-stages are padded to the max
 layer count and masked (idle compute on short stages is the price of
 SPMD; HeteroAuto's cost model accounts the true per-stage time).
+
+Non-uniform per-stage tp (``PipelineSpec.stage_tp`` — DESIGN.md §12):
+the GROUPED runtime lays the pipeline out on a FLAT 1-D pipe mesh of
+Σ tp_s devices where stage s owns a contiguous group of tp_s of them.
+Each device runs one program on its zero-padded Megatron shard; the
+stage-interior psum and the stage-boundary transfer are both one fused
+``all_gather`` over the flat axis plus a per-device masked contraction
+(:func:`group_layout` / :func:`_boundary_tables`), with the boundary
+rows realizing the per-boundary ``reshard`` strategy (``sr_ag`` vs
+``naive`` — ``core/resharding.py``) at the value level.  Single-chunk
+schedules and dp == 1 only; ``from_plan(execute_tp=True)`` builds these
+specs from plans whose stages disagree on tp.
 """
 from __future__ import annotations
 
@@ -96,6 +108,21 @@ class PipelineSpec:
     # legacy one-collective-per-leaf program.  ``from_plan`` threads a
     # searched plan's bucket_bytes here.
     bucket_bytes: int = 0
+    # NON-UNIFORM per-stage tp — the grouped stage runtime (DESIGN.md
+    # §12).  When non-empty, ``stage_tp[s]`` is physical stage s's tp
+    # degree and the pipeline runs on a FLAT 1-D ``pipe_axis`` mesh of
+    # sum(stage_tp) devices, stage s owning a contiguous group of
+    # stage_tp[s] of them, instead of the rectangular (pipe, tp) mesh.
+    # Requires tensor_parallel == 1 (the uniform field is unused),
+    # n_chunks == 1 (single-chunk schedules only: the grouped boundary
+    # collective streams forward along adjacent groups) and
+    # data_parallel == 1.  ``reshard`` names the boundary collective per
+    # stage boundary (len S−1): "none" / "naive" / "sr_ag"
+    # (core/resharding.py); auto-filled when left empty ("none" at
+    # equal-tp boundaries, "sr_ag" elsewhere — from_plan overrides with
+    # the per-boundary ``resharding.choose_strategy`` argmin).
+    stage_tp: Tuple[int, ...] = ()
+    reshard: Tuple[str, ...] = ()
 
     def __post_init__(self):
         assert len(self.layers_per_stage) == self.num_stages * self.n_chunks
@@ -106,6 +133,54 @@ class PipelineSpec:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
         assert len(self.recompute) == self.num_stages
+        if self.stage_tp:
+            object.__setattr__(self, "stage_tp",
+                               tuple(int(t) for t in self.stage_tp))
+            # real raises, not asserts: grouped specs arrive from
+            # hand-editable plan JSON via from_plan
+            if len(self.stage_tp) != self.num_stages:
+                raise ValueError(
+                    f"stage_tp has {len(self.stage_tp)} entries but the "
+                    f"spec has {self.num_stages} physical stages")
+            if any(t < 1 for t in self.stage_tp):
+                raise ValueError(f"stage_tp degrees must be >= 1: "
+                                 f"{self.stage_tp}")
+            if self.tensor_parallel != 1:
+                raise ValueError(
+                    f"non-uniform per-stage tp (stage_tp={self.stage_tp}) "
+                    f"replaces the uniform tensor_parallel="
+                    f"{self.tensor_parallel}; set tensor_parallel=1")
+            if self.n_chunks != 1:
+                raise ValueError(
+                    f"non-uniform per-stage tp (stage_tp={self.stage_tp}) "
+                    f"executes single-chunk schedules only; n_chunks="
+                    f"{self.n_chunks} chunked schedules keep asymmetric "
+                    f"tp a cost-model dimension (DESIGN.md §12)")
+            if self.data_parallel != 1:
+                raise ValueError(
+                    f"non-uniform per-stage tp (stage_tp={self.stage_tp}) "
+                    f"does not compose with data_parallel="
+                    f"{self.data_parallel} yet; dp replicas of grouped "
+                    f"pipelines stay a cost-model dimension "
+                    f"(DESIGN.md §12)")
+            if not self.reshard:
+                object.__setattr__(self, "reshard", tuple(
+                    "none" if a == b else "sr_ag"
+                    for a, b in zip(self.stage_tp, self.stage_tp[1:])))
+            if len(self.reshard) != self.num_stages - 1:
+                raise ValueError(
+                    f"reshard names {len(self.reshard)} boundary "
+                    f"strategies but the spec has "
+                    f"{self.num_stages - 1} stage boundaries")
+            bad = [r for r in self.reshard
+                   if r not in ("none", "naive", "sr_ag")]
+            if bad:
+                raise ValueError(f"unknown reshard strategies {bad}; "
+                                 f"pick from 'none' | 'naive' | 'sr_ag'")
+        elif self.reshard:
+            raise ValueError("reshard strategies need stage_tp (the "
+                             "grouped runtime); uniform specs have no "
+                             "per-boundary collective to choose")
 
     @property
     def total_layers(self) -> int:
@@ -114,6 +189,23 @@ class PipelineSpec:
     @property
     def max_layers(self) -> int:
         return max(self.layers_per_stage)
+
+    @property
+    def grouped(self) -> bool:
+        """True when the spec uses the grouped (non-uniform per-stage tp)
+        runtime — a flat pipe mesh of :attr:`pipe_width` devices."""
+        return bool(self.stage_tp)
+
+    @property
+    def stage_tps(self) -> Tuple[int, ...]:
+        """Effective per-physical-stage tp degrees (uniform or grouped)."""
+        return self.stage_tp if self.stage_tp \
+            else (self.tensor_parallel,) * self.num_stages
+
+    @property
+    def pipe_width(self) -> int:
+        """Devices on the flat pipe axis of the grouped runtime."""
+        return sum(self.stage_tp) if self.stage_tp else self.num_stages
 
 
 def from_plan(plan, microbatches: Optional[int] = None, *,
@@ -127,11 +219,18 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
     order, so the model's layer order follows the schedule's chunk
     placement and the searched non-uniform split survives intact.
 
-    ``execute_tp=True`` consumes the plan's per-stage tp degree and
-    realizes it on the runtime's 2-D ``(pipe, tp)`` mesh.  Only UNIFORM
-    tp is executable — the SPMD runtime runs one program on one mesh
-    shape, so a plan whose stages disagree on tp is refused with a clear
-    error and stays a cost-model artifact (DESIGN.md §8).
+    ``execute_tp=True`` consumes the plan's per-stage tp degree.  A plan
+    whose stages AGREE on tp keeps the legacy rectangular
+    ``(pipe, tp)`` mesh (bit-exact with the historical path); stages
+    that DISAGREE produce a grouped spec (``stage_tp`` non-empty,
+    DESIGN.md §12): the pipeline runs on a flat pipe mesh where each
+    stage owns tp_k devices, and each tp-changing stage boundary gets
+    the reshard collective ``resharding.choose_strategy`` picks from the
+    adjacent chips' NIC / intra-node bandwidths (``sr_ag`` vs
+    ``naive``, priced by ``boundary_time``).  Genuinely inexpressible
+    layouts are still refused with a clear error: non-uniform tp under a
+    CHUNKED schedule (interleaved / zb_v / wave's multi-chunk cousins)
+    or combined with ``execute_dp`` on a dp > 1 plan.
 
     ``execute_dp=True`` consumes the plan's dp degree and realizes it as
     pipeline replicas over the 3-D mesh's leading ``dp`` axis.  Only
@@ -148,17 +247,41 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
     sched = get_schedule(plan.schedule)
     v = sched.n_chunks
     tp = 1
+    stage_tp: Tuple[int, ...] = ()
+    reshard: Tuple[str, ...] = ()
     if execute_tp:
         tps = sorted({s.tp for s in plan.stages})
-        if len(tps) > 1:
-            raise ValueError(
-                f"plan assigns non-uniform per-stage tp {tps} "
-                f"({plan.describe()}); the SPMD runtime executes ONE "
-                f"(pipe, tp) mesh program, so asymmetric intra-stage "
-                f"parallelism stays a cost-model dimension (DESIGN.md §8) "
-                f"— re-search with uniform tp or call from_plan with "
-                f"execute_tp=False")
-        tp = tps[0]
+        if len(tps) == 1:
+            tp = tps[0]
+        else:
+            if v > 1:
+                raise ValueError(
+                    f"plan assigns non-uniform per-stage tp {tps} under "
+                    f"the chunked {plan.schedule!r} schedule "
+                    f"({plan.describe()}); the grouped stage runtime "
+                    f"streams single-chunk schedules only, so this "
+                    f"combination stays a cost-model artifact "
+                    f"(DESIGN.md §12) — re-search with a single-chunk "
+                    f"schedule or uniform tp")
+            if execute_dp and plan.dp > 1:
+                raise ValueError(
+                    f"plan assigns non-uniform per-stage tp {tps} AND "
+                    f"dp={plan.dp} ({plan.describe()}); dp replicas of "
+                    f"grouped pipelines stay a cost-model dimension "
+                    f"(DESIGN.md §12) — call from_plan with "
+                    f"execute_dp=False or re-search with uniform tp")
+            from . import resharding as RS
+            per_tp, per_chip = [], []
+            for s in plan.stages:
+                per_tp.extend([s.tp] * s.pp)
+                per_chip.extend([s.group.spec] * s.pp)
+            stage_tp = tuple(per_tp)
+            reshard = tuple(
+                "none" if per_tp[i] == per_tp[i + 1] else
+                RS.choose_strategy(per_tp[i], per_tp[i + 1],
+                                   nic_bw=per_chip[i].nic_bw,
+                                   intra_bw=per_chip[i + 1].intra_node_bw)
+                for i in range(len(per_tp) - 1))
     dp = 1
     if execute_dp:
         domain = getattr(plan, "batch_domain", None)
@@ -189,7 +312,8 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
                         microbatches or plan.microbatches,
                         tuple(rec), schedule=plan.schedule, n_chunks=v,
                         tensor_parallel=tp, data_parallel=dp,
-                        bucket_bytes=bucket)
+                        bucket_bytes=bucket, stage_tp=stage_tp,
+                        reshard=reshard)
 
 
 def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
@@ -212,6 +336,97 @@ def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
 
 
 # ---------------------------------------------------------------------------
+# grouped stage layout (non-uniform per-stage tp — DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """Static device → (stage, rank) tables for the grouped runtime.
+
+    The flat pipe mesh enumerates stage groups contiguously: device i of
+    N = Σ stage_tp belongs to stage ``stage_of[i]`` as tp member
+    ``rank_of[i]`` of a ``tp_of[i]``-wide group starting at mesh index
+    ``offset[stage_of[i]]``.  ``member[i, j]`` is True iff devices i and
+    j share a stage — the mixing matrix behind the group psum (JAX's
+    ``axis_index_groups`` requires equal-size groups, which non-uniform
+    tp is precisely not, so the grouped collectives are one all-gather
+    over the flat axis followed by a per-device masked contraction)."""
+    stage_tp: Tuple[int, ...]
+    stage_of: np.ndarray      # (N,) int32
+    rank_of: np.ndarray       # (N,) int32
+    tp_of: np.ndarray         # (N,) int32
+    offset: np.ndarray        # (S,) int32  first device of stage s
+    member: np.ndarray        # (N, N) bool
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.stage_of.shape[0])
+
+    @property
+    def tp_min(self) -> int:
+        """The smallest group width — each device's padded local shard is
+        sized as a tp_min-way shard (the WIDEST local view)."""
+        return int(min(self.stage_tp))
+
+
+def group_layout(stage_tp: Sequence[int]) -> GroupLayout:
+    stage_tp = tuple(int(t) for t in stage_tp)
+    stage_of = np.repeat(np.arange(len(stage_tp)), stage_tp)
+    rank_of = np.concatenate([np.arange(t) for t in stage_tp])
+    tp_of = np.asarray(stage_tp)[stage_of]
+    offset = np.cumsum([0] + list(stage_tp))[:-1]
+    member = stage_of[:, None] == stage_of[None, :]
+    return GroupLayout(stage_tp, stage_of.astype(np.int32),
+                       rank_of.astype(np.int32), tp_of.astype(np.int32),
+                       offset.astype(np.int32), member)
+
+
+def _boundary_tables(layout: GroupLayout, reshard: Sequence[str],
+                     d_model: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-device send feature mask (N, d_model) and receive mixing rows
+    (N, N) realizing the per-boundary reshard strategies at the value
+    level (DESIGN.md §12).
+
+    Every tick the grouped runtime moves activations with ONE fused
+    ``all_gather(y * send[i])`` over the flat axis followed by
+    ``recv[i] @ gathered`` per device:
+
+    * ``sr_ag`` outgoing — tp member r of a t-wide group keeps only its
+      feature slice (the t-way partition of d_model), so the boundary
+      carries exactly one copy of the activation split into t shards;
+      the matching recv row sums the WHOLE source group (disjoint shards
+      of a group-replicated value reconstruct it exactly — the
+      destination-side all-gather of the paper's send/recv + all-gather);
+    * ``naive`` / ``none`` outgoing — the full activation per member;
+      the recv row is one-hot at the matched source rank
+      (``rank mod tp_src``), the point-to-point full-copy schedule.
+
+    Stage 0 never receives (single-chunk schedules inject microbatches
+    there), and the last stage's output is only consumed locally (loss).
+    """
+    N, S = layout.num_devices, len(layout.stage_tp)
+    send = np.ones((N, d_model), np.float32)
+    recv = np.zeros((N, N), np.float32)
+    for i in range(N):
+        s = int(layout.stage_of[i])
+        r = int(layout.rank_of[i])
+        t = int(layout.tp_of[i])
+        if s < S - 1 and reshard[s] == "sr_ag":
+            lo, hi = (d_model * r) // t, (d_model * (r + 1)) // t
+            send[i] = 0.0
+            send[i, lo:hi] = 1.0
+        if s == 0:
+            continue
+        t_prev = int(layout.stage_tp[s - 1])
+        off_prev = int(layout.offset[s - 1])
+        if reshard[s - 1] == "sr_ag":
+            recv[i, off_prev:off_prev + t_prev] = 1.0
+        else:
+            recv[i, off_prev + (r % t_prev)] = 1.0
+    return send, recv
+
+
+# ---------------------------------------------------------------------------
 # stage parameter construction
 # ---------------------------------------------------------------------------
 
@@ -231,7 +446,14 @@ def split_stage_params(params: PyTree, cfg: ModelConfig, spec: PipelineSpec
     for chunked ones — slot k of stage s holds the layers of global
     chunk-stage ``schedule.global_stage(s, k, S)``.  Embedding/final-norm
     params are replicated to every stage (injection ops use embed, the
-    last global stage unembeds)."""
+    last global stage unembeds).
+
+    Grouped specs (``spec.stage_tp`` non-empty) lay out PER DEVICE of the
+    flat pipe mesh instead: leaf ``(N, Lmax, ...)`` / mask ``(N, Lmax)``
+    where device i holds its stage's layers sliced to its Megatron tp
+    shard (``rules.tp_local_slice``) and zero-padded to the widest local
+    width (a tp_min-way shard) — the phantom rows/columns are exact
+    zeros and stay zero through training (DESIGN.md §12)."""
     L = cfg.num_layers
     S, v, Lmax = spec.num_stages, spec.n_chunks, spec.max_layers
     assert spec.total_layers == L, (spec.layers_per_stage, L)
@@ -244,6 +466,31 @@ def split_stage_params(params: PyTree, cfg: ModelConfig, spec: PipelineSpec
         if pad:
             part = jnp.pad(part, [(0, pad)] + [(0, 0)] * (leaf.ndim - 1))
         return part
+
+    if spec.stage_tp:
+        from ..sharding import rules
+        layout = group_layout(spec.stage_tp)
+        N, tp_min = layout.num_devices, layout.tp_min
+        mask = np.zeros((N, Lmax), np.bool_)
+        for i in range(N):
+            mask[i, : counts[int(layout.stage_of[i])]] = True
+
+        def split_grouped(kp, leaf):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in kp)
+            return jnp.stack([
+                rules.tp_local_slice(
+                    path, pad_part(leaf, int(layout.stage_of[i])),
+                    int(layout.rank_of[i]), int(layout.tp_of[i]), tp_min)
+                for i in range(N)])                  # (N, Lmax, ...)
+
+        stage_params = {
+            "blocks": jax.tree_util.tree_map_with_path(
+                split_grouped, params["blocks"]),
+            "embed": params["embed"],
+            "final_norm": params["final_norm"],
+        }
+        return stage_params, jnp.asarray(mask)
 
     if v == 1:
         mask = np.zeros((S, Lmax), np.bool_)
@@ -309,6 +556,15 @@ def validate_tensor_parallel(cfg: ModelConfig, tp: int) -> None:
                 f"={n}; pick a tp that divides heads, kv heads and d_ff")
 
 
+def validate_spec_tp(cfg: ModelConfig, spec: PipelineSpec) -> None:
+    """Validate every tp degree a spec realizes — the uniform
+    ``tensor_parallel`` or each distinct grouped ``stage_tp`` entry:
+    the model's head / kv-head / ff counts must divide every degree
+    (including the smallest, which sizes the grouped padding)."""
+    for t in sorted(set(spec.stage_tps)):
+        validate_tensor_parallel(cfg, t)
+
+
 def _tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
     """The per-member view of the model: each tp member owns 1/tp of the
     heads, kv heads and ff width; everything else (d_model, head_dim,
@@ -321,36 +577,42 @@ def _tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
 
 
 def _tp_block_forward(p, cfg: ModelConfig, lcfg: ModelConfig, x,
-                      tp_axis: str):
+                      tp_axis: Optional[str], psum=None):
     """One dense block with manual Megatron tensor parallelism: the
     params are the LOCAL tp shards (column-parallel wq/wk/wv/wi/wg, row-
     parallel wo — ``sharding/rules.py`` placement), so attention runs on
     the member's heads and the MLP on its ff slice; each sub-block's
     row-parallel output projection yields a PARTIAL sum that a psum over
     the tp axis completes BEFORE the residual add, keeping activations
-    (and the norms that consume them) replicated across tp."""
+    (and the norms that consume them) replicated across tp.  ``psum``
+    overrides the collective — the grouped runtime passes its stage-group
+    psum (all-gather + membership-masked contraction, DESIGN.md §12)
+    because its tp groups are sub-spans of the flat pipe axis, not a
+    mesh axis of their own."""
+    if psum is None:
+        psum = lambda v: jax.lax.psum(v, tp_axis)
     h = layers.apply_norm(p["ln1"], x, cfg.norm)
     a = attention.self_attention(p["attn"], lcfg, h)
-    x = x + jax.lax.psum(a, tp_axis)
+    x = x + psum(a)
     h = layers.apply_norm(p["ln2"], x, cfg.norm)
     y = layers.apply_mlp(p["mlp"], h, cfg.mlp)
-    return x + jax.lax.psum(y, tp_axis), {}
+    return x + psum(y), {}
 
 
 def _stage_forward(blocks, mask_row, cfg, x, kind: str, remat: bool,
                    *, tp_axis: Optional[str] = None,
-                   lcfg: Optional[ModelConfig] = None):
+                   lcfg: Optional[ModelConfig] = None, psum=None):
     """Run Lmax (padded) layers; masked layers are identity.  With
-    ``tp_axis`` set, each layer is the manual tensor-parallel dense block
-    (every member runs the same psums, padded layers included, so the
-    program stays SPMD-uniform)."""
+    ``tp_axis`` (or an explicit ``psum`` collective) set, each layer is
+    the manual tensor-parallel dense block (every member runs the same
+    psums, padded layers included, so the program stays SPMD-uniform)."""
 
     def one(x, inp):
         p, valid = inp
-        if tp_axis is None:
+        if tp_axis is None and psum is None:
             y, m = tfm.block_forward(p, cfg, x, kind)
         else:
-            y, m = _tp_block_forward(p, cfg, lcfg, x, tp_axis)
+            y, m = _tp_block_forward(p, cfg, lcfg, x, tp_axis, psum)
         aux = m.get("moe_aux_loss", 0.0) + m.get("moe_z_loss", 0.0)
         x = jnp.where(valid, y, x)
         # rank-1, not scalar: rank-0 float consts become implicit
@@ -517,6 +779,154 @@ def schedule_injection_order(schedule, num_stages: int, microbatches: int
     return inj
 
 
+def _grouped_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
+                          *, remat: bool = True,
+                          schedule: Optional[str] = None):
+    """The grouped (non-uniform per-stage tp) pipeline core — the
+    DESIGN.md §12 stage-group runtime contract.
+
+    One shard_map program manual over a FLAT pipe axis of
+    N = Σ stage_tp devices.  Stage s owns the contiguous device span
+    ``[offset[s], offset[s] + stage_tp[s])`` (:func:`group_layout`); each
+    device runs the SAME tick program on its zero-padded Megatron shard
+    (``split_stage_params``; the phantom heads / ff slices compute exact
+    zeros, so the padded program is value-identical to the unpadded
+    one).  Collectives:
+
+    * stage-interior psum — JAX cannot form unequal-size
+      ``axis_index_groups``, so the group psum is one ``all_gather``
+      over the flat axis + a per-device membership-row contraction
+      (its transpose is a psum-scatter, so autodiff through it is the
+      standard Megatron backward);
+    * stage-boundary transfer — one fused ``all_gather`` of the
+      send-masked outputs + a per-device receive-row contraction
+      (:func:`_boundary_tables`), realizing the per-boundary ``reshard``
+      strategy at the value level: ``sr_ag`` sources keep only their
+      feature shard (one activation copy crosses the boundary, the
+      recv row's group sum IS the destination all-gather), ``naive`` /
+      ``none`` sources send the full copy to their matched rank.
+
+    The loss gates on ``rank == 0`` so each group counts its emitted
+    microbatches exactly once, then psums over the flat axis.  Returns
+    the same ``(replica_fn, in_specs, manual, out_axes)`` contract as
+    :func:`_pipeline_replica_core` (dp is always 1 here)."""
+    kind = M._block_kind(cfg)
+    axis = spec.pipe_axis
+    nstages = spec.num_stages
+    b = spec.microbatches
+    layout = group_layout(spec.stage_tp)
+    N = layout.num_devices
+    tmax = max(spec.stage_tp)
+    validate_spec_tp(cfg, spec)
+    if axis not in mesh.axis_names or mesh.shape[axis] != N:
+        raise ValueError(
+            f"grouped spec stage_tp={spec.stage_tp} needs a flat "
+            f"{axis!r} mesh axis of {N} devices (= sum of the stage "
+            f"groups); got mesh {dict(mesh.shape)}")
+    from .schedules import get_schedule
+    sched = get_schedule(schedule or spec.schedule)
+    if sched.n_chunks != 1:
+        raise ValueError(
+            f"schedule {sched.name!r} is chunked (v={sched.n_chunks}); "
+            f"non-uniform per-stage tp executes single-chunk schedules "
+            f"only (DESIGN.md §12)")
+    tables = spmd_tick_tables(sched, nstages, b)
+    used = set(np.unique(tables.src[tables.active]))
+    # single-chunk streams are strictly INJECT/PREV (v == 1 means every
+    # hop g−1 → g lands on the previous physical stage, and stage 0 only
+    # injects), so the grouped runtime needs exactly one fused transfer
+    assert used <= {SRC_INJECT, SRC_PREV}, (sched.name, used)
+    xs = (jnp.asarray(tables.mb), jnp.asarray(tables.src),
+          jnp.asarray(tables.active), jnp.asarray(tables.emit))
+
+    lcfg = _tp_local_cfg(cfg, layout.tp_min)
+    send_np, recv_np = _boundary_tables(layout, spec.reshard, cfg.d_model)
+    stage_of_t = jnp.asarray(layout.stage_of)
+    rank_of_t = jnp.asarray(layout.rank_of)
+    member_t = jnp.asarray(layout.member, jnp.float32)
+    send_t = jnp.asarray(send_np)
+    recv_t = jnp.asarray(recv_np)
+
+    def replica_fn(stage_params, mask, tokens):
+        # Inside shard_map: leading device dim is local (size 1) -> squeeze.
+        blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
+        mask_dev = mask[0]                        # (Lmax,)
+        embed = stage_params["embed"]
+        fnorm = stage_params["final_norm"]
+        dev = jax.lax.axis_index(axis)
+        sid = jnp.take(stage_of_t, dev)
+        rank0 = jnp.take(rank_of_t, dev) == 0
+        mrow = jnp.take(member_t, dev, axis=0)    # (N,) group membership
+        srow = jnp.take(send_t, dev, axis=0)      # (d,) boundary send mask
+        rrow = jnp.take(recv_t, dev, axis=0)      # (N,) boundary recv row
+
+        def gpsum(v):
+            g = jax.lax.all_gather(v, axis)       # (N, ...)
+            return jnp.tensordot(mrow.astype(v.dtype), g, axes=(0, 0))
+
+        psum_cb = gpsum if tmax > 1 else None
+
+        mb_size, S_seq = tokens.shape[1], tokens.shape[2]
+        d = cfg.d_model
+        dtype = layers.dtype_of(cfg)
+
+        def tick(carry, row):
+            x_prev, loss_acc, aux_acc, denom = carry
+            mb_row, src_row, act_row, emit_row = row
+            mb_idx = jnp.take(mb_row, sid)
+            src = jnp.take(src_row, sid)
+            active = jnp.take(act_row, sid)
+            take = active & jnp.take(emit_row, sid) & rank0
+            toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+                                                keepdims=False)
+            x0 = layers.embed_tokens(embed, toks).astype(dtype)
+            x = jnp.where(src == SRC_INJECT, x0, x_prev)
+            y, aux = _stage_forward(blocks, mask_dev, cfg, x, kind, remat,
+                                    lcfg=lcfg, psum=psum_cb)
+            # the group output y is replicated across the stage's tp
+            # members (each sub-block closes with the group psum), so
+            # ONLY rank 0 counts its emitted microbatch's CE / tokens
+            h = layers.apply_norm(fnorm, y, cfg.norm)
+            targets = jnp.concatenate(
+                [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+            lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+            ce = M.chunked_ce(embed, h, targets, lmask)
+            loss_acc = loss_acc + jnp.where(take, ce, 0.0)
+            denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
+            aux_acc = aux_acc + jnp.where(active & rank0, aux, 0.0)
+            # boundary transfer: one fused gather of the send-masked
+            # outputs, then each device mixes its sources' contributions
+            # (disjoint sr_ag shards sum to the full activation; naive
+            # rows pick their matched source) — the next tick's x_prev
+            g = jax.lax.all_gather(y * srow.astype(y.dtype), axis)
+            x_prev2 = jnp.tensordot(rrow.astype(y.dtype), g, axes=(0, 0))
+            return (x_prev2, loss_acc, aux_acc, denom), None
+
+        x_init = jnp.zeros((mb_size, S_seq, d), dtype)
+        zero = jnp.zeros((1,), jnp.float32)
+        (_, loss_sum, aux_sum, denom), _ = jax.lax.scan(
+            tick, (x_init, zero, zero, zero), xs)
+        loss_sum = jax.lax.psum(loss_sum, axis)
+        denom = jax.lax.psum(denom, axis)
+        aux_sum = jax.lax.psum(aux_sum, axis) / nstages
+        return loss_sum, denom, aux_sum
+
+    aps = abstract_stage_params(cfg, spec)
+    from ..sharding import rules
+    blk_specs = rules.stage_block_specs(
+        aps["blocks"], pipe_axis=axis, tp_axis=None, stacked_prefix=2)
+    in_specs = (
+        {
+            "blocks": blk_specs,
+            "embed": jax.tree.map(lambda _: P(), aps["embed"]),
+            "final_norm": jax.tree.map(lambda _: P(), aps["final_norm"]),
+        },
+        P(axis),
+        P(),
+    )
+    return replica_fn, in_specs, {axis}, (axis,)
+
+
 def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                            *, remat: bool = True,
                            schedule: Optional[str] = None):
@@ -529,7 +939,12 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     (pipe × tp) replica holds the same values; nothing touches the dp
     axis, so dp replicas stay independent until the caller closes them
     (the loss path psums them, the train step syncs gradients —
-    DESIGN.md §9)."""
+    DESIGN.md §9).  Grouped specs (non-uniform per-stage tp) dispatch to
+    :func:`_grouped_replica_core`, which honors the same contract on the
+    flat stage-group mesh (DESIGN.md §12)."""
+    if spec.stage_tp:
+        return _grouped_replica_core(cfg, spec, mesh, remat=remat,
+                                     schedule=schedule)
     kind = M._block_kind(cfg)
     axis = spec.pipe_axis
     nstages = spec.num_stages
@@ -1039,6 +1454,12 @@ def simulate_pipeline_forward(params: PyTree, cfg: ModelConfig,
     """Run the pipeline global-stage-by-global-stage on the local device
     (following the schedule's chunk placement for chunked specs); must
     equal the monolithic ``M.forward`` exactly (tested)."""
+    if spec.stage_tp:
+        raise NotImplementedError(
+            "simulate_pipeline_forward is the uniform-layout oracle; "
+            "grouped specs (non-uniform per-stage tp) hold tp-sharded "
+            "per-device params — validate them against the monolithic "
+            "forward directly (DESIGN.md §12)")
     stage_params, mask = split_stage_params(params, cfg, spec)
     kind = M._block_kind(cfg)
     tokens = batch["tokens"]

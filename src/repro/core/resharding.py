@@ -13,7 +13,12 @@ s_tp,i+1-ways) across the slow inter-island link.  Two strategies:
 
 ``cross_bytes``/``intra_bytes`` give the analytic byte counts used by the
 cost model and the Table 9 ablation; ``reshard`` is a runnable shard_map
-implementation of both schedules (validated in tests on virtual devices).
+implementation of both schedules (validated in tests on virtual devices);
+``choose_strategy`` is the per-boundary argmin the grouped stage runtime
+(``heteropp.from_plan``, DESIGN.md §12) and ``cost_model.evaluate`` both
+consume, so the executed boundary collective and the priced one cannot
+drift apart.  ``tests/test_resharding_exec.py`` pins the value
+equivalence, the HLO byte accounting and the closed-form properties.
 """
 from __future__ import annotations
 
@@ -66,6 +71,21 @@ def boundary_time(act_bytes: int, tp_src: int, tp_dst: int, *,
     if c.intra_bytes:
         t += c.intra_bytes / intra_bw
     return t
+
+
+def choose_strategy(tp_src: int, tp_dst: int, *, nic_bw: float,
+                    intra_bw: float, nics_per_node: int = 8) -> str:
+    """Pick the cheaper boundary strategy by :func:`boundary_time`.
+
+    Both closed forms are linear in ``act_bytes`` with no constant term,
+    so the argmin is independent of the payload size — compare at a unit
+    payload.  Ties go to ``sr_ag`` (the paper's default)."""
+    unit = 1 << 20
+    kw = dict(nic_bw=nic_bw, intra_bw=intra_bw,
+              nics_per_node=nics_per_node)
+    t_sr = boundary_time(unit, tp_src, tp_dst, strategy="sr_ag", **kw)
+    t_nv = boundary_time(unit, tp_src, tp_dst, strategy="naive", **kw)
+    return "sr_ag" if t_sr <= t_nv else "naive"
 
 
 # ---------------------------------------------------------------------------

@@ -23,12 +23,16 @@ reduce-scatter + all-gather with dp-sharded optimizer state —
 DESIGN.md §9) on the up-to-3-D ``(dp, pipe, tp)`` mesh.  ``--plan
 plan.json`` executes a saved HeteroAuto ``ParallelPlan`` (see
 ``examples/hetero_search.py --save-plan``) through ``heteropp.from_plan``
-— schedule, non-uniform layer split AND the plan's (uniform) tp and dp
-included; ``--search A:2,B:2`` runs the HeteroAuto search on the given
-chip cluster first and executes the winner the same way (dp·pp·tp must
-fit the available devices; plans with NON-uniform per-stage tp or a
-non-uniform batch domain are refused — asymmetric parallelism stays a
-cost-model dimension).
+— schedule, non-uniform layer split AND the plan's tp and dp included.
+Plans whose stages DISAGREE on tp execute too, via the grouped stage
+runtime (DESIGN.md §12): a flat pipe mesh where stage k owns tp_k
+devices, with the §5 reshard collective (sr_ag vs naive, picked per
+boundary by ``resharding.boundary_time``) at every tp-differing stage
+boundary.  ``--search A:2,B:2`` runs the HeteroAuto search on the given
+chip cluster first and executes the winner the same way (dp·pp·tp — or
+Σ tp_k for grouped plans — must fit the available devices; only
+genuinely inexpressible layouts are refused: non-uniform tp under a
+chunked schedule, non-uniform batch domains).
 """
 from __future__ import annotations
 
@@ -79,7 +83,8 @@ def _pipeline_spec(args, cfg):
                              f"drop --pipeline-parallel")
         if args.tensor_parallel:
             raise SystemExit(f"{src} sets tp from the plan (uniform plans "
-                             f"execute it on the (pipe, tp) mesh); drop "
+                             f"execute on the (pipe, tp) mesh, non-uniform "
+                             f"ones via the grouped stage runtime); drop "
                              f"--tensor-parallel {args.tensor_parallel}")
         if args.data_parallel:
             raise SystemExit(f"{src} sets dp from the plan (uniform batch "
@@ -96,7 +101,7 @@ def _pipeline_spec(args, cfg):
         try:
             spec = HP.from_plan(plan, microbatches=mb or None,
                                 execute_tp=True, execute_dp=True)
-            HP.validate_tensor_parallel(cfg, spec.tensor_parallel)
+            HP.validate_spec_tp(cfg, spec)
             # the plan's searched sync mode executes too (its
             # bucket_bytes already rode in through from_plan)
             return spec, plan.dp_sync
@@ -179,14 +184,24 @@ def run_pipeline(args, cfg):
     devices = jax.devices()
     spec, grad_sync = _pipeline_spec(args, cfg)
     pp, tp, dp = spec.num_stages, spec.tensor_parallel, spec.data_parallel
-    need = dp * pp * tp
-    if len(devices) < need:
-        raise SystemExit(f"pipeline needs ≥{dp}·{pp}·{tp}={need} devices "
-                         f"(have {len(devices)})")
-    sizes = [("dp", dp), ("pipe", pp), ("tp", tp)]
-    sizes = [(a, n) for a, n in sizes if n > 1 or a == "pipe"]
-    mesh = Mesh(np.array(devices[:need]).reshape([n for _, n in sizes]),
-                tuple(a for a, _ in sizes))
+    if spec.grouped:
+        # non-uniform per-stage tp: flat 1-D pipe mesh of Σ tp_k devices,
+        # stage k owning tp_k of them (DESIGN.md §12)
+        need = spec.pipe_width
+        if len(devices) < need:
+            raise SystemExit(
+                f"grouped pipeline needs ≥Σtp={need} devices "
+                f"(stage_tp={spec.stage_tp}, have {len(devices)})")
+        mesh = Mesh(np.array(devices[:need]), ("pipe",))
+    else:
+        need = dp * pp * tp
+        if len(devices) < need:
+            raise SystemExit(f"pipeline needs ≥{dp}·{pp}·{tp}={need} "
+                             f"devices (have {len(devices)})")
+        sizes = [("dp", dp), ("pipe", pp), ("tp", tp)]
+        sizes = [(a, n) for a, n in sizes if n > 1 or a == "pipe"]
+        mesh = Mesh(np.array(devices[:need]).reshape([n for _, n in sizes]),
+                    tuple(a for a, _ in sizes))
 
     mb = spec.microbatches
     total_mb = dp * mb                   # global batch in microbatches
@@ -196,7 +211,10 @@ def run_pipeline(args, cfg):
     if spec.total_layers != cfg.num_layers:
         raise SystemExit(f"plan covers {spec.total_layers} layers but "
                          f"{cfg.name} has {cfg.num_layers}")
-    print(f"pipeline: stages={pp} tp={tp} dp={dp} v={spec.n_chunks} "
+    print(f"pipeline: stages={pp} "
+          + (f"stage_tp={spec.stage_tp} reshard={spec.reshard} "
+             if spec.grouped else f"tp={tp} dp={dp} ")
+          + f"v={spec.n_chunks} "
           f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
           f"schedule={spec.schedule}"
           + (f" grad_sync={grad_sync}" if dp > 1 else "")

@@ -191,6 +191,33 @@ def tp_body_dim(path: str, body_ndim: int) -> Optional[int]:
     return None
 
 
+def tp_local_slice(path: str, body, rank: int, tp: int, pad_tp: int):
+    """Slice one stage's stacked ``(L, ...)`` block leaf down to tp member
+    ``rank``'s Megatron shard, zero-padded back to the width a
+    ``pad_tp``-way shard would have (``pad_tp`` ≤ ``tp``; both divide the
+    sharded dim).  This is the grouped stage runtime's parameter layout
+    (DESIGN.md §12): stages with different tp degrees share one SPMD
+    program sized at the WIDEST local shard, and the padding rows/columns
+    are exact zeros — phantom heads / ff slices contribute 0 to every
+    matmul, psum and gradient, so the padded program is bit-equal to the
+    unpadded one.  Replicated leaves (norm scales, qk-norms) pass through
+    untouched."""
+    d = tp_body_dim(path, body.ndim - 1)
+    if d is None:
+        return body
+    dim = 1 + d                       # skip the stacked layer dim
+    full = body.shape[dim]
+    assert full % tp == 0 and full % pad_tp == 0, (path, full, tp, pad_tp)
+    w = full // tp
+    part = jax.lax.slice_in_dim(body, rank * w, (rank + 1) * w, axis=dim)
+    pad = full // pad_tp - w
+    if pad:
+        pads = [(0, 0)] * body.ndim
+        pads[dim] = (0, pad)
+        part = jnp.pad(part, pads)
+    return part
+
+
 def stage_block_specs(blocks: PyTree, *, pipe_axis: str = "pipe",
                       tp_axis: Optional[str] = "tp",
                       stacked_prefix: int = 2) -> PyTree:

@@ -12,7 +12,9 @@ psum over tp), activations streaming along pipe rows only.  Checks:
 * gradients flow through psum + ppermute to the tp-sharded params;
 * a searched-plan (uniform tp) runs end to end via
   ``from_plan(execute_tp=True)`` bit-identically to the direct spec;
-* a non-uniform-tp plan is refused with a clear error.
+* a non-uniform-tp plan maps to a grouped spec (DESIGN.md §12; executed
+  in run_spmd_grouped_tp_pipeline.py), and the refusal survives only
+  for the chunked-schedule layouts the group runtime cannot express.
 
 Run as a script (spawned by tests/test_heteropp.py) so the forced device
 count never leaks into the main pytest process.
@@ -113,19 +115,28 @@ def main():
     assert plan_loss == losses["zb_v"], (plan_loss, losses)
     print(f"from_plan tp=2 loss={plan_loss:.6f} (bit-exact vs direct spec)")
 
-    bad = ParallelPlan(
+    mixed = ParallelPlan(
         [StagePlan(chips.ChipGroup(chips.CHIPS["A"], 8), 4, 1, 2, False),
          StagePlan(chips.ChipGroup(chips.CHIPS["B"], 4), 2, 1, 2, False)],
         dp=1, microbatches=b, schedule="1f1b")
+    # non-uniform tp now maps to the grouped stage runtime (DESIGN.md
+    # §12 — executed end to end in run_spmd_grouped_tp_pipeline.py)
+    gspec = HP.from_plan(mixed, execute_tp=True)
+    assert gspec.grouped and gspec.stage_tp == (4, 2), gspec
+    print(f"non-uniform tp plan grouped: stage_tp={gspec.stage_tp} "
+          f"reshard={gspec.reshard}")
+    # the historical default still maps it (tp stays cost-model-only)
+    assert HP.from_plan(mixed).tensor_parallel == 1
+    # chunked schedules are the surviving refusal: no grouped tick
+    # program for v > 1 chunk slots
+    chunked = dataclasses.replace(mixed, schedule="zb_v")
     try:
-        HP.from_plan(bad, execute_tp=True)
+        HP.from_plan(chunked, execute_tp=True)
     except ValueError as e:
         assert "non-uniform" in str(e), e
-        print("non-uniform tp plan refused")
+        print("chunked x non-uniform tp refused")
     else:
-        raise AssertionError("non-uniform tp plan was not refused")
-    # but the historical default still maps it (tp stays cost-model-only)
-    assert HP.from_plan(bad).tensor_parallel == 1
+        raise AssertionError("chunked non-uniform plan was not refused")
     print("TP_OK")
 
 

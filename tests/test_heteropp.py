@@ -177,7 +177,8 @@ def test_spmd_pipeline_subprocess():
 def test_spmd_tp_pipeline_subprocess():
     """2-D (pipe × tp) pipeline on 8 virtual devices: tp-sharded stages
     match the tp=1 pipeline and the monolithic model; uniform-tp plans
-    execute, non-uniform ones are refused (DESIGN.md §8)."""
+    execute on this mesh, non-uniform ones route to the grouped stage
+    runtime (DESIGN.md §12)."""
     tests_dir = os.path.dirname(os.path.abspath(__file__))
     script = os.path.join(tests_dir, "helpers", "run_spmd_tp_pipeline.py")
     root = os.path.dirname(tests_dir)
@@ -190,10 +191,55 @@ def test_spmd_tp_pipeline_subprocess():
     assert "TP_OK" in r.stdout
 
 
+@pytest.mark.e2e
+def test_spmd_grouped_tp_pipeline_subprocess():
+    """NON-uniform per-stage tp (4, 2, 1, 1) on 8 virtual devices via
+    the grouped stage runtime: asymmetric loss matches the monolithic
+    model, a searched plan executes bit-identically to the direct spec,
+    training decreases the loss with phantom shards staying exactly
+    zero (DESIGN.md §12 — the ISSUE 7 acceptance layout)."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    script = os.path.join(tests_dir, "helpers",
+                          "run_spmd_grouped_tp_pipeline.py")
+    root = os.path.dirname(tests_dir)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "GROUPED_TP_OK" in r.stdout
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs ≥4 devices (CI runs an 8-device job)")
+def test_spmd_grouped_tp_pipeline_in_process():
+    """The grouped (non-uniform per-stage tp) runtime on the REAL
+    process devices: stage_tp = (2, 1, 1) over 4 devices, loss matches
+    the monolithic model (DESIGN.md §12)."""
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"),
+                              dtype="float32", num_layers=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 16), 0,
+                                cfg.vocab_size)
+    mesh = jax.make_mesh((4,), ("pipe",))
+    spec = HP.PipelineSpec(3, (1, 1, 1), microbatches=2,
+                           stage_tp=(2, 1, 1))
+    assert spec.reshard == ("sr_ag", "none")
+    sp, mask = HP.split_stage_params(params, cfg, spec)
+    loss = float(HP.make_spmd_pipeline_loss(cfg, spec, mesh)(
+        sp, mask, tokens))
+    refs = [float(M.loss_fn(params, cfg, {"tokens": tokens[i]},
+                            remat=False)[0]) for i in range(2)]
+    ref = float(np.mean(refs))
+    assert abs(loss - ref) / max(abs(ref), 1e-9) < 2e-3, (loss, ref)
+
+
 def test_from_plan_tp_modes():
     """from_plan: tp stays a cost-model dimension by default; with
-    execute_tp=True a uniform plan sets spec.tensor_parallel and a
-    non-uniform one is refused with a clear error."""
+    execute_tp=True a uniform plan keeps the legacy bit-exact
+    (pipe × tp) path and a NON-uniform one becomes a grouped spec
+    (DESIGN.md §12) with a reshard strategy per tp-differing boundary."""
     from repro.core.cost_model import ParallelPlan, StagePlan
     g = lambda n, c: chips.ChipGroup(chips.CHIPS[n], c)
     uni = ParallelPlan([StagePlan(g("A", 4), 2, 1, 1, False),
@@ -202,12 +248,48 @@ def test_from_plan_tp_modes():
     assert HP.from_plan(uni).tensor_parallel == 1
     spec = HP.from_plan(uni, execute_tp=True)
     assert spec.tensor_parallel == 2 and spec.num_stages == 2
+    assert not spec.grouped
     mixed = ParallelPlan([StagePlan(g("A", 4), 4, 1, 1, False),
                           StagePlan(g("B", 4), 2, 1, 1, False)],
                          dp=1, microbatches=4)
     assert HP.from_plan(mixed).tensor_parallel == 1   # legacy path intact
+    gspec = HP.from_plan(mixed, execute_tp=True)
+    assert gspec.grouped and gspec.stage_tp == (4, 2)
+    assert gspec.tensor_parallel == 1 and gspec.pipe_width == 6
+    assert gspec.reshard in (("sr_ag",), ("naive",))
+    assert heteroauto.runtime_path(mixed) == "grouped-tp"
+    assert heteroauto.runtime_path(uni) == "uniform-tp"
+
+
+def test_from_plan_refuses_inexpressible_layouts():
+    """The clear-error path survives for layouts the group runtime
+    cannot express: non-uniform tp under a chunked schedule, and
+    execute_dp with dp > 1 on a grouped spec."""
+    from repro.core.cost_model import ParallelPlan, StagePlan
+    g = lambda n, c: chips.ChipGroup(chips.CHIPS[n], c)
+    chunked = ParallelPlan([StagePlan(g("A", 4), 4, 1, 1, False),
+                            StagePlan(g("B", 4), 2, 1, 1, False)],
+                           dp=1, microbatches=4, schedule="zb_v")
     with pytest.raises(ValueError, match="non-uniform"):
-        HP.from_plan(mixed, execute_tp=True)
+        HP.from_plan(chunked, execute_tp=True)
+    assert heteroauto.runtime_path(chunked).startswith("refused")
+    mixed_dp = ParallelPlan([StagePlan(g("A", 8), 4, 1, 2, False),
+                             StagePlan(g("B", 4), 2, 1, 2, False)],
+                            dp=2, microbatches=4)
+    with pytest.raises(ValueError, match="non-uniform"):
+        HP.from_plan(mixed_dp, execute_tp=True, execute_dp=True)
+    # direct grouped-spec construction enforces the same contract
+    with pytest.raises(ValueError, match="non-uniform"):
+        HP.PipelineSpec(2, (1, 1, 1, 1), microbatches=4, stage_tp=(4, 2),
+                        schedule="zb_v", n_chunks=2)
+    with pytest.raises(ValueError, match="non-uniform"):
+        HP.PipelineSpec(2, (1, 1), microbatches=4, stage_tp=(4, 2),
+                        data_parallel=2)
+    # a non-dividing model refuses through the same validator as uniform
+    cfg = get_smoke_config("granite_8b")           # 2 heads, 2 kv heads
+    spec = HP.PipelineSpec(2, (1, 1), microbatches=4, stage_tp=(4, 2))
+    with pytest.raises(ValueError, match="num_heads"):
+        HP.validate_spec_tp(cfg, spec)
 
 
 def test_validate_tensor_parallel():
