@@ -305,6 +305,25 @@ def main(argv=None):
              f"imbalance={ch['imbalance']:.1%} "
              f"(speedup {cu['iter_time'] / ch['iter_time']:.2f}x)")
 
+        # executed vs priced pacing (ISSUE 8 / DESIGN.md §13): the
+        # runtime's stacked per-replica program must run exactly the
+        # tick count of the pacing (max-allocation) replica — the b the
+        # §4.3.2 max-based cost model charges
+        from repro.core import heteropp as HP
+        for name, alloc in (("acceptance", (5, 3)),
+                            ("exp_c1", tuple(dom_h.allocations))):
+            S = 2
+            stacked = HP.domain_tick_tables("1f1b", S, alloc)
+            priced = HP.spmd_tick_tables("1f1b", S, max(alloc))
+            ok = stacked.ticks == priced.ticks
+            emit(f"table_batch_domain.{name}.executed_ticks",
+                 stacked.ticks,
+                 f"stacked per-replica program, domain {list(alloc)}, "
+                 f"S={S} 1f1b")
+            emit(f"table_batch_domain.{name}.priced_ticks", priced.ticks,
+                 f"pacing b={max(alloc)} tick count "
+                 f"({'MATCH' if ok else 'MISMATCH'})")
+
     # Fig 12: small-scale e2e DDR vs TCP (8-layer model, TP4 PP2 DP2)
     small = dataclasses.replace(cfg, num_layers=8)
     g2 = [chips.ChipGroup(chips.CHIPS["A"], 8), chips.ChipGroup(chips.CHIPS["C"], 8)]

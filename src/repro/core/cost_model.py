@@ -68,8 +68,10 @@ class ParallelPlan:
     # len == dp, sum == global batch microbatches, and ``microbatches``
     # is max(batch_domain) — the PACING replica the §4.3.2 max-based
     # cost model charges.  None means the uniform domain (b each).
-    # Non-uniform domains are cost-model-only: the SPMD runtime refuses
-    # them in ``heteropp.from_plan(execute_dp=True)`` (DESIGN.md §9).
+    # Non-uniform domains EXECUTE: ``heteropp.from_plan(execute_dp=True)``
+    # threads them into per-replica tick programs padded to the pacing
+    # replica's length (DESIGN.md §13), so the priced pacing term equals
+    # the executed tick count.
     batch_domain: Optional[Tuple[int, ...]] = None
     # dp grad-sync configuration (DESIGN.md §10) — searched by
     # ``heteroauto.search`` (sync mode × transport × bucket size) and
@@ -302,8 +304,9 @@ def evaluate(plan: ParallelPlan, cfg: ModelConfig, seq_len: int,
 
     ``plan.microbatches`` is the PACING replica's allocation: for plans
     carrying a non-uniform ``batch_domain`` it is max(domain), so the
-    max-based iteration time prices the domain's imbalance exactly (the
-    runtime refuses such plans — DESIGN.md §9).
+    max-based iteration time prices the domain's imbalance exactly —
+    and equals the tick count the runtime's pacing replica executes
+    (``heteropp.domain_tick_tables`` — DESIGN.md §13).
 
     ``dp_sync`` / ``dp_transport`` / ``bucket_bytes`` override the
     plan's grad-sync configuration: the sync mode drives both the

@@ -7,9 +7,10 @@ Two halves, mirroring the schedule subsystem's analytic/runtime split:
   each replica's modeled throughput (paper §4's inter-replica load
   balancing), with divisibility rounding, per-replica memory-cap checks,
   and exact closed-form imbalance terms.  ``heteroauto.search`` consumes
-  these for dp degrees that do not divide the global batch; non-uniform
-  allocations stay cost-model-only (the SPMD runtime refuses them, the
-  same contract as non-uniform per-stage tp — DESIGN.md §8/§9).
+  these for dp degrees that do not divide the global batch, and the SPMD
+  runtime EXECUTES the resulting non-uniform allocations via per-replica
+  tick programs padded to the pacing replica's length
+  (``heteropp.domain_tick_tables`` — DESIGN.md §13).
 
 * :mod:`grad_sync` — gradient synchronization over the dp axis: bucketed
   byte accounting with closed-form sync times over the
@@ -20,12 +21,13 @@ Two halves, mirroring the schedule subsystem's analytic/runtime split:
   the memory-capped small-chip mode).
 """
 from .batch_domain import (BatchDomain, check_memory_caps, domain_cost,
-                           partition)
+                           pad_index_map, partition)
 from .grad_sync import (GRAD_SYNC_MODES, GradBuckets, bucketize,
                         replica_grad_norm, sync_time, zero1_scatter_dim)
 
 __all__ = [
-    "BatchDomain", "check_memory_caps", "domain_cost", "partition",
+    "BatchDomain", "check_memory_caps", "domain_cost", "pad_index_map",
+    "partition",
     "GRAD_SYNC_MODES", "GradBuckets", "bucketize", "replica_grad_norm",
     "sync_time", "zero1_scatter_dim",
 ]

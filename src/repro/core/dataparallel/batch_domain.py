@@ -20,11 +20,17 @@ leaves on the table.  Uniform domains on identical replicas have
 imbalance 0; uniform domains on heterogeneous replicas are the
 "uniform" ablation row of ``benchmarks/bench_ablation.py``.
 
-Only UNIFORM domains execute on the SPMD runtime (every replica runs
-the same tick program for the same number of microbatches — one mesh,
-one program); non-uniform domains are refused by
-``heteropp.from_plan(execute_dp=True)`` and stay cost-model artifacts,
-mirroring the non-uniform-tp contract of DESIGN.md §8 (see §9).
+Non-uniform domains EXECUTE on the SPMD runtime (DESIGN.md §13): each
+dp replica runs the schedule's tick program for ITS OWN allocation,
+padded with bit-inert no-op ticks to the pacing replica's length
+(``heteropp.domain_tick_tables``), and the global batch is sharded by
+the per-replica token counts — :func:`pad_index_map` maps the tight
+replica-major batch onto the padded per-replica slots the sharded
+program consumes.  Per-replica WEIGHTING needs no extra machinery: the
+loss is the global batch mean (CE sums and token counts psum over dp
+before the division), so replica r's contribution is automatically
+weighted by ``allocations[r] / total`` and the gradient sync stays the
+plain sum ``grad_sync`` already performs.
 """
 from __future__ import annotations
 
@@ -74,7 +80,12 @@ def partition(total_microbatches: int, throughputs: Sequence[float], *,
 
     Largest-remainder rounding in units of ``quantum`` microbatches,
     with every replica guaranteed ``min_per_replica`` (a replica that
-    gets zero microbatches would idle a whole pipeline).  Raises if the
+    gets zero microbatches would idle a whole pipeline).  Because every
+    allocation is a multiple of ``quantum``, the floor must be one too —
+    a non-multiple floor is refused loudly instead of being silently
+    rounded UP to whole quanta (the old behaviour over-granted the
+    documented guarantee and made the "cannot give" error fire for
+    totals the caller's floor would have admitted).  Raises if the
     constraints cannot be met (too few microbatches for dp replicas)."""
     dp = len(throughputs)
     if dp < 1:
@@ -84,7 +95,13 @@ def partition(total_microbatches: int, throughputs: Sequence[float], *,
     if total_microbatches % quantum:
         raise ValueError(f"total_microbatches={total_microbatches} not a "
                          f"multiple of quantum={quantum}")
-    floor_q = -(-min_per_replica // quantum)      # ceil in quanta
+    if min_per_replica % quantum:
+        raise ValueError(
+            f"min_per_replica={min_per_replica} is not a multiple of "
+            f"quantum={quantum}: allocations are handed out in whole "
+            f"quanta, so a fractional floor would be silently rounded "
+            f"up — pass a floor the quantum can honor exactly")
+    floor_q = min_per_replica // quantum          # exact (checked above)
     units = total_microbatches // quantum
     if units < dp * floor_q:
         raise ValueError(
@@ -106,6 +123,18 @@ def partition(total_microbatches: int, throughputs: Sequence[float], *,
                        tuple(float(t) for t in throughputs))
 
 
+def _argmax(values: Sequence[float]) -> int:
+    """Explicit argmax with a deterministic LOWEST-INDEX tie-break —
+    replicas with equal pacing time resolve to the first one, by
+    strict ``>`` comparison rather than a float-equality ``.index``
+    lookup on a separately computed max."""
+    best = 0
+    for i in range(1, len(values)):
+        if values[i] > values[best]:
+            best = i
+    return best
+
+
 def domain_cost(domain: BatchDomain,
                 t_microbatch: Optional[Sequence[float]] = None) -> dict:
     """Exact pacing terms of a batch domain.
@@ -113,20 +142,46 @@ def domain_cost(domain: BatchDomain,
     ``t_microbatch[r]`` is replica r's time per microbatch (defaults to
     the reciprocal of the domain's throughputs).  Returns the pacing
     replica's time ``iter_time``, the fluid lower bound ``balanced``,
-    and ``imbalance = iter_time / balanced − 1``."""
+    and ``imbalance = iter_time / balanced − 1``.  Ties on the pacing
+    time resolve to the lowest replica index (:func:`_argmax`)."""
     t = list(t_microbatch) if t_microbatch is not None else \
         [1.0 / r for r in domain.throughputs]
     assert len(t) == domain.dp, (len(t), domain.dp)
     times = [a * ti for a, ti in zip(domain.allocations, t)]
-    iter_time = max(times)
+    pacing = _argmax(times)
+    iter_time = times[pacing]
     balanced = domain.total / sum(1.0 / ti for ti in t)
     return {
         "iter_time": iter_time,
-        "pacing_replica": times.index(iter_time),
+        "pacing_replica": pacing,
         "balanced": balanced,
         "imbalance": iter_time / balanced - 1.0 if balanced > 0 else 0.0,
         "replica_times": times,
     }
+
+
+def pad_index_map(allocations: Sequence[int]) -> List[int]:
+    """Slot map from the TIGHT replica-major batch layout to the padded
+    per-replica layout the SPMD runtime shards (DESIGN.md §13).
+
+    The tight layout holds ``Σ allocations`` microbatches with replica
+    r's ``allocations[r]`` consecutive; the padded layout holds
+    ``dp · max(allocations)`` slots so every dp shard is the same size.
+    Entry ``[r · bmax + j]`` is the tight index of replica r's j-th
+    local slot; pad slots (``j ≥ allocations[r]``) repeat the replica's
+    LAST real microbatch — their content is never read (replica r's
+    tick program only names microbatches < allocations[r]), repeating a
+    real row just keeps every gather in range."""
+    allocations = [int(a) for a in allocations]
+    if not allocations or any(a < 1 for a in allocations):
+        raise ValueError(f"allocations must be positive: {allocations}")
+    bmax = max(allocations)
+    idx: List[int] = []
+    offset = 0
+    for a in allocations:
+        idx.extend(offset + min(j, a - 1) for j in range(bmax))
+        offset += a
+    return idx
 
 
 def check_memory_caps(domain: BatchDomain, act_bytes_per_mb: float,

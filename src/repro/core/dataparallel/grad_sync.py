@@ -36,6 +36,12 @@ step executes inside ``shard_map`` (``heteropp``, DESIGN.md §9):
 Both modes perform the same sums in the same order, so they agree
 bitwise up to reduction associativity (validated to ≈1e-8 in
 ``tests/helpers/run_spmd_dp_pipeline.py``).
+
+Non-uniform batch domains (DESIGN.md §13) need NO sync-side weighting:
+the loss is the global batch mean (CE sums and token counts psum over
+dp before the division), so each replica's raw gradient is already the
+allocation-weighted PARTIAL of the global gradient and both modes stay
+the plain sums above — the same collectives, the same prices.
 """
 from __future__ import annotations
 

@@ -71,11 +71,13 @@ class SearchResult:
     evaluated: int
     search_time_s: float
     stage1_dp: Optional[int] = None
-    # how the SPMD runtime would execute the winning plan: "uniform-tp",
-    # "grouped-tp" (non-uniform per-stage tp via the DESIGN.md §12
-    # stage-group runtime), or "refused: <reason>" for the layouts the
-    # runtime genuinely cannot express (chunked schedule × non-uniform
-    # tp, non-uniform batch domains, ...)
+    # how the SPMD runtime would execute the winning plan: "uniform-tp"
+    # or "grouped-tp" (non-uniform per-stage tp via the DESIGN.md §12
+    # stage-group runtime), each with a "+uneven-dp" suffix when the
+    # plan carries a non-uniform batch domain (per-replica tick
+    # programs — DESIGN.md §13), or "refused: <reason>" for the layouts
+    # the runtime genuinely cannot express (chunked schedule ×
+    # non-uniform tp, grouped tp × dp > 1, ...)
     runtime: str = ""
 
     @property
@@ -95,7 +97,8 @@ def runtime_path(plan: Optional[ParallelPlan]) -> str:
         spec = HP.from_plan(plan, execute_tp=True, execute_dp=True)
     except ValueError as e:
         return f"refused: {e}"
-    return "grouped-tp" if spec.grouped else "uniform-tp"
+    path = "grouped-tp" if spec.grouped else "uniform-tp"
+    return path + "+uneven-dp" if spec.batch_domain else path
 
 
 def _pow2s_upto(n: int) -> List[int]:
@@ -164,8 +167,9 @@ def search(groups: Sequence[ChipGroup], cfg: ModelConfig, gbs_tokens: int,
                    allocations and the plan carries the resulting
                    ``batch_domain``; the §4.3.2 max charges the pacing
                    replica's allocation, so the domain's imbalance is
-                   priced exactly.  Such plans stay cost-model-only
-                   (``from_plan(execute_dp=True)`` refuses them).
+                   priced exactly.  Winning plans EXECUTE:
+                   ``from_plan(execute_dp=True)`` threads the domain
+                   into per-replica tick programs (DESIGN.md §13).
     ``sync_modes`` / ``dp_transports`` / ``bucket_sizes`` — the dp
                    grad-sync sweep (DESIGN.md §10): every dp > 1
                    candidate is priced under each (mode, transport,

@@ -21,8 +21,11 @@ schedule/runtime contract):
   ``psum`` over tp, so activations re-enter the pipe stream replicated
   and the tick-synchronous ppermute keeps moving along pipe rows only.
   The dp axis replicates the whole (pipe × tp) pipeline: each dp member
-  runs its own microbatches (the batch domain — uniform allocations
-  only, ``repro.core.dataparallel``), no collective touches dp during
+  runs its own microbatches — a UNIFORM allocation b, or a non-uniform
+  ``batch_domain`` where replica r runs the schedule's tick program for
+  its own ``allocations[r]``, padded with bit-inert no-op ticks to the
+  pacing replica's length (``domain_tick_tables``, DESIGN.md §13;
+  ``repro.core.dataparallel``) — no collective touches dp during
   the tick scan, and gradients close with ONE bucketed dp sync
   (``grad_sync``: flat psum, or ZeRO-1 reduce-scatter + all-gather with
   dp-sharded optimizer state) before the optimizer step.
@@ -88,8 +91,12 @@ class PipelineSpec:
     each pipe row on the 2-D ``(pipe, tp)`` mesh (DESIGN.md §8); 1 keeps
     the 1-D pipe mesh.  ``data_parallel`` replicates the whole
     (pipe × tp) pipeline over a leading ``dp`` mesh axis (DESIGN.md §9):
-    ``microbatches`` is the PER-REPLICA allocation b (uniform batch
-    domains only — the global batch is dp·b microbatches)."""
+    ``microbatches`` is the PACING replica's allocation b.  A uniform
+    batch domain (empty ``batch_domain``) gives every replica b
+    microbatches (global batch dp·b); a NON-UNIFORM ``batch_domain``
+    gives replica r its own ``batch_domain[r]`` (global batch
+    Σ allocations), executed as per-replica tick programs padded to the
+    pacing replica's length (DESIGN.md §13)."""
     num_stages: int
     layers_per_stage: Tuple[int, ...]     # per global chunk-stage
     microbatches: int
@@ -101,6 +108,16 @@ class PipelineSpec:
     tp_axis: str = "tp"
     data_parallel: int = 1                # pipeline replicas over dp
     dp_axis: str = "dp"
+    # NON-UNIFORM batch domain (DESIGN.md §13): ``batch_domain[r]`` is dp
+    # replica r's microbatch allocation (throughput-proportional splits
+    # from ``repro.core.dataparallel.batch_domain``).  Empty means
+    # uniform — every replica runs ``microbatches``.  When non-empty the
+    # pacing (max) allocation must equal ``microbatches`` and each
+    # replica runs the schedule's tick program for ITS OWN allocation,
+    # padded with bit-inert no-op ticks to the pacing replica's length
+    # (``domain_tick_tables``).  Uniform non-empty domains normalize to
+    # () so the legacy bit-exact path is taken.
+    batch_domain: Tuple[int, ...] = ()
     # dp grad-sync bucket budget (DESIGN.md §10): with bucket_bytes > 0
     # the psum sync mode coalesces gradient leaves into fused per-bucket
     # all-reduces issued in wgrad-completion order (later chunk slots
@@ -133,6 +150,28 @@ class PipelineSpec:
             object.__setattr__(self, "recompute",
                                (True,) * self.num_stages)
         assert len(self.recompute) == self.num_stages
+        if self.batch_domain:
+            object.__setattr__(self, "batch_domain",
+                               tuple(int(a) for a in self.batch_domain))
+            # real raises, not asserts: domains arrive from hand-editable
+            # plan JSON via from_plan
+            if len(self.batch_domain) != self.data_parallel:
+                raise ValueError(
+                    f"batch_domain has {len(self.batch_domain)} "
+                    f"allocations but data_parallel="
+                    f"{self.data_parallel}")
+            if any(a < 1 for a in self.batch_domain):
+                raise ValueError(f"batch_domain allocations must be "
+                                 f">= 1: {self.batch_domain}")
+            if max(self.batch_domain) != self.microbatches:
+                raise ValueError(
+                    f"batch_domain pacing allocation "
+                    f"{max(self.batch_domain)} must equal microbatches="
+                    f"{self.microbatches} — ``microbatches`` is the "
+                    f"pacing replica's tick-table length (DESIGN.md §13)")
+            if len(set(self.batch_domain)) == 1:
+                # uniform domains take the legacy bit-exact path
+                object.__setattr__(self, "batch_domain", ())
         if self.stage_tp:
             object.__setattr__(self, "stage_tp",
                                tuple(int(t) for t in self.stage_tp))
@@ -207,6 +246,18 @@ class PipelineSpec:
         """Devices on the flat pipe axis of the grouped runtime."""
         return sum(self.stage_tp) if self.stage_tp else self.num_stages
 
+    @property
+    def batch_allocations(self) -> Tuple[int, ...]:
+        """Effective per-dp-replica microbatch allocations (uniform or
+        non-uniform — DESIGN.md §13)."""
+        return self.batch_domain if self.batch_domain \
+            else (self.microbatches,) * self.data_parallel
+
+    @property
+    def total_microbatches(self) -> int:
+        """Global-batch microbatch count Σ_r allocations[r]."""
+        return sum(self.batch_allocations)
+
 
 def from_plan(plan, microbatches: Optional[int] = None, *,
               execute_tp: bool = False,
@@ -233,12 +284,15 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
     or combined with ``execute_dp`` on a dp > 1 plan.
 
     ``execute_dp=True`` consumes the plan's dp degree and realizes it as
-    pipeline replicas over the 3-D mesh's leading ``dp`` axis.  Only
-    UNIFORM batch domains are executable — one SPMD program runs the
-    same tick count on every replica, so a plan carrying a non-uniform
-    ``batch_domain`` (throughput-proportional allocations from
-    ``repro.core.dataparallel.batch_domain``) is refused with a clear
-    error and stays a cost-model artifact (DESIGN.md §9).
+    pipeline replicas over the 3-D mesh's leading ``dp`` axis.  A plan
+    carrying a NON-UNIFORM ``batch_domain`` (throughput-proportional
+    allocations from ``repro.core.dataparallel.batch_domain``) threads
+    the allocations into ``PipelineSpec.batch_domain``: each replica
+    runs the schedule's tick program for its own allocation, padded to
+    the pacing replica's length (DESIGN.md §13).  An explicit
+    ``microbatches`` override that disagrees with the domain's pacing
+    allocation is refused — the override cannot rescale a per-replica
+    split.
 
     The defaults keep the historical behaviour: tp and dp remain
     cost-model dimensions and the runtime executes the layer split
@@ -283,17 +337,18 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
                                    intra_bw=per_chip[i + 1].intra_node_bw)
                 for i in range(len(per_tp) - 1))
     dp = 1
+    batch_domain: Tuple[int, ...] = ()
     if execute_dp:
         domain = getattr(plan, "batch_domain", None)
         if domain is not None and len(set(domain)) > 1:
-            raise ValueError(
-                f"plan carries a non-uniform batch domain "
-                f"{list(domain)} ({plan.describe()}); the SPMD runtime "
-                f"runs ONE tick program on every dp replica, so "
-                f"throughput-proportional batch allocations stay a "
-                f"cost-model dimension (DESIGN.md §9) — re-search with a "
-                f"dp that divides the batch or call from_plan with "
-                f"execute_dp=False")
+            if microbatches is not None and microbatches != max(domain):
+                raise ValueError(
+                    f"microbatches={microbatches} override conflicts "
+                    f"with the plan's non-uniform batch domain "
+                    f"{list(domain)} ({plan.describe()}): the override "
+                    f"cannot rescale a per-replica split — rebuild the "
+                    f"plan's domain instead (DESIGN.md §13)")
+            batch_domain = tuple(int(a) for a in domain)
         dp = plan.dp
     phys, rec = [], []
     for s in plan.stages:
@@ -312,8 +367,8 @@ def from_plan(plan, microbatches: Optional[int] = None, *,
                         microbatches or plan.microbatches,
                         tuple(rec), schedule=plan.schedule, n_chunks=v,
                         tensor_parallel=tp, data_parallel=dp,
-                        bucket_bytes=bucket, stage_tp=stage_tp,
-                        reshard=reshard)
+                        bucket_bytes=bucket, batch_domain=batch_domain,
+                        stage_tp=stage_tp, reshard=reshard)
 
 
 def chunk_layer_counts(phys: Sequence[int], schedule) -> Tuple[int, ...]:
@@ -758,6 +813,77 @@ def spmd_tick_tables(schedule, num_stages: int, microbatches: int
     return TickTables(ticks, mb, chunk, src, active, emit)
 
 
+def domain_tick_tables(schedule, num_stages: int,
+                       allocations: Sequence[int]) -> TickTables:
+    """Per-dp-replica tick programs for a NON-UNIFORM batch domain,
+    stacked on a middle dp dim (DESIGN.md §13).
+
+    Replica r gets :func:`spmd_tick_tables` for ``b = allocations[r]``
+    — the schedule's own program for that microbatch count — padded at
+    the tail to the pacing replica's tick count with inert no-op ticks
+    (``active = emit = False``; mb/chunk 0 and src ``SRC_PREV`` are
+    never consulted).  Padded ticks are bit-inert: the tight-stream
+    property (invariant above) means every ACTIVE op's producer ran on
+    an active tick of the same replica's un-padded prefix, so no active
+    op ever consumes a padded tick's output, and the loss/denominator/
+    aux accumulations are all gated on ``active``/``emit``.  Tables come
+    back shaped ``(ticks, dp, S)``; the runtime selects its replica's
+    row by ``jax.lax.axis_index(dp_axis)``.
+
+    Raises NotImplementedError if some replica's program is LONGER than
+    the pacing (max-allocation) replica's — tick count is expected to be
+    monotone in b for every registered schedule, but the contract that
+    ``microbatches == max(allocations)`` prices the pacing term depends
+    on it, so it is checked rather than assumed."""
+    allocations = [int(a) for a in allocations]
+    if not allocations or any(a < 1 for a in allocations):
+        raise ValueError(f"allocations must be positive: {allocations}")
+    per = [spmd_tick_tables(schedule, num_stages, a) for a in allocations]
+    ticks = per[_np_argmax([t.ticks for t in per])].ticks
+    pacing = spmd_tick_tables(schedule, num_stages, max(allocations))
+    if ticks != pacing.ticks:
+        raise NotImplementedError(
+            f"schedule {schedule!r}: a replica with allocation "
+            f"{allocations[_np_argmax([t.ticks for t in per])]} needs "
+            f"{ticks} ticks but the pacing allocation "
+            f"{max(allocations)} needs {pacing.ticks} — tick count is "
+            f"not monotone in b, so the priced pacing term would not "
+            f"equal the executed tick count (DESIGN.md §13)")
+
+    def _pad(t: TickTables) -> TickTables:
+        n = ticks - t.ticks
+        if n == 0:
+            return t
+        pad_i = np.zeros((n, num_stages), np.int32)
+        pad_b = np.zeros((n, num_stages), np.bool_)
+        return TickTables(
+            ticks,
+            np.concatenate([t.mb, pad_i]),
+            np.concatenate([t.chunk, pad_i]),
+            np.concatenate([t.src, np.full((n, num_stages), SRC_PREV,
+                                           np.int32)]),
+            np.concatenate([t.active, pad_b]),
+            np.concatenate([t.emit, pad_b]))
+
+    padded = [_pad(t) for t in per]
+    return TickTables(
+        ticks,
+        np.stack([t.mb for t in padded], axis=1),
+        np.stack([t.chunk for t in padded], axis=1),
+        np.stack([t.src for t in padded], axis=1),
+        np.stack([t.active for t in padded], axis=1),
+        np.stack([t.emit for t in padded], axis=1))
+
+
+def _np_argmax(values: Sequence[int]) -> int:
+    """Lowest-index argmax over a python list (no float equality)."""
+    best = 0
+    for i in range(1, len(values)):
+        if values[i] > values[best]:
+            best = i
+    return best
+
+
 def schedule_injection_order(schedule, num_stages: int, microbatches: int
                              ) -> List[int]:
     """Stage-0 injection order for SINGLE-chunk schedules — the diagonal-
@@ -992,18 +1118,26 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                         f"schedule {sched.name!r} places chunks differently "
                         f"from the spec's {spec.schedule!r}; the parameter "
                         f"layout is placement-specific")
-    tables = spmd_tick_tables(sched, nstages, b)
+    # table rows are (ticks, S) for uniform domains, (ticks, dp, S) for
+    # non-uniform ones (per-replica programs padded to the pacing
+    # replica's length — DESIGN.md §13); the ellipsis indexing below
+    # covers both layouts
+    if spec.batch_domain:
+        tables = domain_tick_tables(sched, nstages, spec.batch_domain)
+    else:
+        tables = spmd_tick_tables(sched, nstages, b)
     # static routing facts: skip permutes/branches/wrap edges no tick
     # ever uses (single-chunk schedules keep the old one-permute,
     # no-wrap program)
-    used = set(np.unique(tables.src[tables.active]))
+    used = set(np.unique(tables.src[tables.active])) \
+        if tables.active.any() else set()
     needs_prev = SRC_PREV in used
     needs_next = SRC_NEXT in used
     needs_local = SRC_LOCAL in used
-    wraps_prev = bool(np.any(tables.active[:, 0]
-                             & (tables.src[:, 0] == SRC_PREV)))
-    wraps_next = bool(np.any(tables.active[:, -1]
-                             & (tables.src[:, -1] == SRC_NEXT)))
+    wraps_prev = bool(np.any(tables.active[..., 0]
+                             & (tables.src[..., 0] == SRC_PREV)))
+    wraps_next = bool(np.any(tables.active[..., -1]
+                             & (tables.src[..., -1] == SRC_NEXT)))
     xs = (jnp.asarray(tables.mb), jnp.asarray(tables.chunk),
           jnp.asarray(tables.src), jnp.asarray(tables.active),
           jnp.asarray(tables.emit))
@@ -1015,6 +1149,10 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         embed = stage_params["embed"]
         fnorm = stage_params["final_norm"]
         sid = jax.lax.axis_index(axis)
+        # non-uniform domains stack per-replica programs on a middle dp
+        # dim; each replica selects ITS OWN row (DESIGN.md §13)
+        ridx = jax.lax.axis_index(spec.dp_axis) if spec.batch_domain \
+            else None
 
         mb_size, S_seq = tokens.shape[1], tokens.shape[2]
         d = cfg.d_model
@@ -1022,6 +1160,8 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
         def tick(carry, row):
             x_prev, x_next, y_loc, loss_acc, aux_acc, denom = carry
+            if ridx is not None:
+                row = tuple(jnp.take(a, ridx, axis=0) for a in row)
             mb_row, ck_row, src_row, act_row, emit_row = row
             mb_idx = jnp.take(mb_row, sid)
             src = jnp.take(src_row, sid)
@@ -1114,6 +1254,44 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     return replica_fn, in_specs, manual, out_axes
 
 
+def _prepare_domain_tokens(spec: PipelineSpec, tokens):
+    """Validate/normalize the leading microbatch dim of ``tokens`` for
+    the dp runtime (runs OUTSIDE shard_map).
+
+    Uniform domains require exactly ``dp · b`` microbatches.  Non-uniform
+    domains accept either layout (unambiguous: Σ allocations < dp · bmax
+    strictly when allocations differ):
+
+    * TIGHT replica-major — ``Σ allocations`` microbatches, replica r's
+      ``allocations[r]`` consecutive; packed onto the padded per-replica
+      slots via :func:`~repro.core.dataparallel.pad_index_map` (pad slots
+      repeat the replica's last real microbatch — never read, the
+      replica's tick program only names microbatches < allocations[r]);
+    * PADDED — ``dp · bmax`` microbatches, already laid out per replica;
+      passed through as-is (what the tight path produces)."""
+    dp, b = spec.data_parallel, spec.microbatches
+    n = tokens.shape[0]
+    if not spec.batch_domain:
+        if dp > 1 and n != dp * b:
+            raise ValueError(
+                f"tokens carry {n} microbatches but data_parallel={dp} "
+                f"× microbatches={b} needs {dp * b} (uniform batch "
+                f"domain — DESIGN.md §9)")
+        return tokens
+    from .dataparallel import pad_index_map
+    total = spec.total_microbatches
+    if n == total:
+        return jnp.take(tokens,
+                        jnp.asarray(pad_index_map(spec.batch_domain)),
+                        axis=0)
+    if n == dp * b:
+        return tokens
+    raise ValueError(
+        f"tokens carry {n} microbatches but the batch domain "
+        f"{list(spec.batch_domain)} needs {total} (tight replica-major) "
+        f"or {dp * b} (padded per-replica — DESIGN.md §13)")
+
+
 def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
                             *, remat: bool = True,
                             schedule: Optional[str] = None):
@@ -1126,8 +1304,11 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     whole pipeline and shards the microbatch dim of ``tokens``
     (DESIGN.md §9).
 
-    tokens: (dp·b, mb_size, S_seq) — b microbatches per dp replica,
-    streamed through the schedule's static tick program
+    tokens: (dp·b, mb_size, S_seq) — b microbatches per dp replica (for
+    a non-uniform ``spec.batch_domain``, either the tight Σ-allocations
+    replica-major layout or the padded dp·bmax layout —
+    :func:`_prepare_domain_tokens`), streamed through the schedule's
+    static tick program
     (:func:`spmd_tick_tables`): per tick each member runs one
     chunk-forward on the microbatch the tables name, reading its input
     from a fresh embedding, a ±1 pipe neighbor, or its own previous
@@ -1137,14 +1318,23 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     replica_fn, in_specs, manual, out_axes = _pipeline_replica_core(
         cfg, spec, mesh, remat=remat, schedule=schedule)
     dp, dpax, b = spec.data_parallel, spec.dp_axis, spec.microbatches
+    total_mb = spec.total_microbatches
 
     def stage_loss(stage_params, mask, tokens):
         loss_sum, denom, aux_sum = replica_fn(stage_params, mask, tokens)
         if dp > 1:
             loss_sum = jax.lax.psum(loss_sum, dpax)
             denom = jax.lax.psum(denom, dpax)
-            aux_sum = jax.lax.psum(aux_sum, dpax) / dp
-        return loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+            aux_sum = jax.lax.psum(aux_sum, dpax)
+            # aux is a per-microbatch mean over the GLOBAL batch: uniform
+            # domains factor the count as /dp then /b (bit-exact with the
+            # historical path); non-uniform domains divide once by
+            # Σ allocations (DESIGN.md §13)
+            aux = aux_sum / total_mb if spec.batch_domain \
+                else aux_sum / dp / max(b, 1)
+        else:
+            aux = aux_sum / max(b, 1)
+        return loss_sum / jnp.maximum(denom, 1.0) + aux
 
     from .jax_compat import shard_map
     smapped = shard_map(stage_loss, mesh=mesh, in_specs=in_specs,
@@ -1153,11 +1343,7 @@ def make_spmd_pipeline_loss(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     def loss_fn(stage_params, mask, tokens):
         # (dp·S·tp,) identical per-member copies -> scalar (mean keeps
         # the cotangent uniform across members; each carries 1/n of it)
-        if dp > 1 and tokens.shape[0] != dp * b:
-            raise ValueError(
-                f"tokens carry {tokens.shape[0]} microbatches but "
-                f"data_parallel={dp} × microbatches={b} needs {dp * b} "
-                f"(uniform batch domain — DESIGN.md §9)")
+        tokens = _prepare_domain_tokens(spec, tokens)
         return jnp.mean(smapped(stage_params, mask, tokens))
 
     return loss_fn
@@ -1368,12 +1554,17 @@ def _make_dp_train_step(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
             # the GLOBAL batch mean: CE sums and token counts cross dp
             # BEFORE the division (same objective as the loss path — a
             # per-replica division would silently diverge from it the
-            # moment denom became data-dependent)
+            # moment denom became data-dependent).  Non-uniform domains
+            # need no extra weighting here: replica r's sums cover its
+            # own allocations[r] microbatches, so the psum IS the
+            # allocation-weighted global total (DESIGN.md §13)
             loss_sum, denom, aux_sum = replica_fn(p, mask, tokens)
             loss_sum = jax.lax.psum(loss_sum, dpax)
             denom = jax.lax.psum(denom, dpax)
-            aux_sum = jax.lax.psum(aux_sum, dpax) / dp
-            gl = loss_sum / jnp.maximum(denom, 1.0) + aux_sum / max(b, 1)
+            aux_sum = jax.lax.psum(aux_sum, dpax)
+            aux = aux_sum / spec.total_microbatches if spec.batch_domain \
+                else aux_sum / dp / max(b, 1)
+            gl = loss_sum / jnp.maximum(denom, 1.0) + aux
             return jnp.sum(gl) / (nmem * dp)
 
         val, grads = jax.value_and_grad(scaled_loss)(stage_params)
@@ -1430,12 +1621,7 @@ def _make_dp_train_step(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
     def train_step(state, mask, batch):
         params, opt_state, step = state
-        tokens = batch["tokens"]
-        if tokens.shape[0] != dp * b:
-            raise ValueError(
-                f"tokens carry {tokens.shape[0]} microbatches but "
-                f"data_parallel={dp} × microbatches={b} needs {dp * b} "
-                f"(uniform batch domain — DESIGN.md §9)")
+        tokens = _prepare_domain_tokens(spec, batch["tokens"])
         new_p, new_opt, mets = smapped(params, opt_state, step, mask,
                                        tokens)
         return ((new_p, new_opt, step + 1),

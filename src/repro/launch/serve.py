@@ -13,6 +13,7 @@ output alone.
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -24,6 +25,20 @@ from ..models import model as M
 from ..training import serve_step as SS
 
 BACKENDS = ["auto", "einsum", "pallas"]
+
+
+def percentile(sorted_samples, q: float) -> float:
+    """Nearest-rank percentile: the ⌈q·n⌉-th smallest of ``sorted_samples``
+    (index ``ceil(q·n) − 1``).  The old ``int(n·q)`` index is biased one
+    rank HIGH wherever q·n is an integer (p95 of 20 samples returned the
+    max instead of the 19th), and for small n could collapse p95 onto
+    p50."""
+    n = len(sorted_samples)
+    if n == 0:
+        raise ValueError("percentile of an empty sample list")
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"q must be in (0, 1]: {q}")
+    return sorted_samples[max(1, math.ceil(q * n)) - 1]
 
 
 def main():
@@ -81,8 +96,8 @@ def main():
     gen = jnp.concatenate(out, axis=1)
     if step_s:
         srt = sorted(step_s)
-        p50 = srt[len(srt) // 2]
-        p95 = srt[min(len(srt) - 1, int(len(srt) * 0.95))]
+        p50 = percentile(srt, 0.50)
+        p95 = percentile(srt, 0.95)
         tot = sum(step_s)
         print(f"decode: {tot * 1e3:.1f} ms over {len(step_s)} steps — "
               f"p50={p50 * 1e3:.2f} ms p95={p95 * 1e3:.2f} ms "

@@ -28,11 +28,16 @@ Plans whose stages DISAGREE on tp execute too, via the grouped stage
 runtime (DESIGN.md §12): a flat pipe mesh where stage k owns tp_k
 devices, with the §5 reshard collective (sr_ag vs naive, picked per
 boundary by ``resharding.boundary_time``) at every tp-differing stage
-boundary.  ``--search A:2,B:2`` runs the HeteroAuto search on the given
-chip cluster first and executes the winner the same way (dp·pp·tp — or
-Σ tp_k for grouped plans — must fit the available devices; only
-genuinely inexpressible layouts are refused: non-uniform tp under a
-chunked schedule, non-uniform batch domains).
+boundary.  Plans carrying a non-uniform ``batch_domain`` execute too:
+each dp replica runs the schedule's tick program for its own
+allocation, padded to the pacing replica's length (DESIGN.md §13).
+``--search A:2,B:2`` runs the HeteroAuto search on the given chip
+cluster first and executes the winner the same way (``--search-dp``
+widens the dp candidate set, ``--search-uneven-dp`` admits dp degrees
+that do not divide the batch; dp·pp·tp — or Σ tp_k for grouped plans —
+must fit the available devices; only genuinely inexpressible layouts
+are refused: non-uniform tp under a chunked schedule, grouped tp ×
+dp > 1).
 """
 from __future__ import annotations
 
@@ -65,6 +70,10 @@ def _pipeline_spec(args, cfg):
     mb = args.microbatches
     if args.plan and args.search:
         raise SystemExit("--plan and --search are mutually exclusive")
+    if (args.search_dp or args.search_uneven_dp) and not args.search:
+        flag = "--search-dp" if args.search_dp else "--search-uneven-dp"
+        raise SystemExit(f"{flag} only shapes the HeteroAuto search; "
+                         f"add --search CHIP:N,...")
     if args.plan or args.search:
         # the plan carries schedule, stage count, tp, dp AND the grad-
         # sync config; conflicting explicit flags would be silently
@@ -124,13 +133,16 @@ def _pipeline_spec(args, cfg):
         for part in args.search.split(","):
             name, count = part.split(":")
             groups.append(chips.ChipGroup(chips.CHIPS[name], int(count)))
+        dp_cands = [int(d) for d in args.search_dp.split(",")] \
+            if args.search_dp else [1]
         r = heteroauto.search(groups, cfg, args.batch * args.seq, args.seq,
-                              two_stage=False, dp_candidates=[1])
+                              two_stage=False, dp_candidates=dp_cands,
+                              uneven_dp=args.search_uneven_dp)
         if r.plan is None:
             raise SystemExit(f"--search {args.search}: no feasible plan for "
                              f"{cfg.name}")
         print(f"searched plan ({r.evaluated} configs, {r.search_time_s:.2f}s): "
-              f"{r.plan.describe()}")
+              f"{r.plan.describe()} [{r.runtime}]")
         return _from_plan(r.plan)
     from ..core.schedules import get_schedule
     pp = args.pipeline_parallel
@@ -204,10 +216,16 @@ def run_pipeline(args, cfg):
                     tuple(a for a, _ in sizes))
 
     mb = spec.microbatches
-    total_mb = dp * mb                   # global batch in microbatches
+    # global batch in microbatches: Σ per-replica allocations (= dp·mb
+    # for uniform domains); non-uniform domains feed the runtime the
+    # TIGHT replica-major layout, which packs it onto the padded
+    # per-replica slots itself (DESIGN.md §13)
+    total_mb = spec.total_microbatches
     if args.batch % total_mb:
-        raise SystemExit(f"--batch {args.batch} not divisible by "
-                         f"dp·microbatches = {dp}·{mb} = {total_mb}")
+        raise SystemExit(f"--batch {args.batch} not divisible by the "
+                         f"global microbatch count "
+                         f"Σ allocations = {total_mb} "
+                         f"(allocations {list(spec.batch_allocations)})")
     if spec.total_layers != cfg.num_layers:
         raise SystemExit(f"plan covers {spec.total_layers} layers but "
                          f"{cfg.name} has {cfg.num_layers}")
@@ -216,7 +234,9 @@ def run_pipeline(args, cfg):
              if spec.grouped else f"tp={tp} dp={dp} ")
           + f"v={spec.n_chunks} "
           f"layers/global-stage={spec.layers_per_stage} microbatches={mb} "
-          f"schedule={spec.schedule}"
+          + (f"batch_domain={list(spec.batch_domain)} "
+             if spec.batch_domain else "")
+          + f"schedule={spec.schedule}"
           + (f" grad_sync={grad_sync}" if dp > 1 else "")
           + (f" bucket_bytes={spec.bucket_bytes}"
              if dp > 1 and grad_sync == "psum" and spec.bucket_bytes
@@ -311,6 +331,16 @@ def main():
     ap.add_argument("--search", default=None, metavar="CHIP:N,...",
                     help="HeteroAuto-search the given chip cluster and "
                          "run the winning plan (e.g. A:2,B:2)")
+    ap.add_argument("--search-dp", default=None, metavar="N,...",
+                    help="with --search: dp candidate degrees (comma "
+                         "list, default 1; the winner's dp executes on "
+                         "the (dp, pipe, tp) mesh)")
+    ap.add_argument("--search-uneven-dp", action="store_true",
+                    help="with --search: also consider dp degrees that "
+                         "do NOT divide the batch — the winner carries "
+                         "a throughput-proportional batch_domain and "
+                         "executes via per-replica tick programs "
+                         "(DESIGN.md §13)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-friendly)")
     ap.add_argument("--seed", type=int, default=0)

@@ -15,7 +15,8 @@ full-step shard_map.  Checks:
   also match the dp=1 train step on the same global batch;
 * a uniform-dp plan runs end to end via ``from_plan(execute_dp=True)``
   bit-identically to the direct spec; a plan with a non-uniform batch
-  domain is refused with a clear error.
+  domain maps to a per-replica-program spec (numerics in
+  ``run_spmd_uneven_dp_pipeline.py`` — DESIGN.md §13).
 
 Run as a script (spawned by tests/test_dataparallel.py) so the forced
 device count never leaks into the main pytest process.
@@ -178,7 +179,7 @@ def main():
           f"(dp1 gnorm={float(m1['grad_norm']):.4f})")
     assert err_dp1 < 1e-5, err_dp1
 
-    # ---- plan path: uniform dp executes, non-uniform domain refused ------
+    # ---- plan path: uniform AND non-uniform dp domains execute -----------
     from repro.core import chips
     from repro.core.cost_model import ParallelPlan, StagePlan
     plan = ParallelPlan(
@@ -217,16 +218,17 @@ def main():
           f"rel_err={serr:.2e}")
     assert serr < 2e-3, (sloss, ref)
 
-    bad = dataclasses.replace(plan, batch_domain=(5, 3), microbatches=5)
-    try:
-        HP.from_plan(bad, execute_dp=True)
-    except ValueError as e:
-        assert "non-uniform batch domain" in str(e), e
-        print("non-uniform batch domain refused")
-    else:
-        raise AssertionError("non-uniform batch domain was not refused")
-    # but the historical default still maps it (dp stays cost-model-only)
-    assert HP.from_plan(bad).data_parallel == 1
+    # a non-uniform batch domain now EXECUTES (per-replica tick
+    # programs — DESIGN.md §13; numerics covered end-to-end by
+    # run_spmd_uneven_dp_pipeline.py)
+    het = dataclasses.replace(plan, batch_domain=(5, 3), microbatches=5,
+                              schedule="1f1b")
+    hspec = HP.from_plan(het, execute_dp=True)
+    assert hspec.batch_domain == (5, 3) and hspec.microbatches == 5
+    assert hspec.total_microbatches == 8
+    print("non-uniform batch domain maps to a per-replica spec")
+    # and the historical default still maps it (dp stays cost-model-only)
+    assert HP.from_plan(het).data_parallel == 1
     print("DP_OK")
 
 

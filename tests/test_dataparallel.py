@@ -41,16 +41,47 @@ def test_partition_uniform_and_remainder():
 
 
 def test_partition_quantum_and_floor():
-    dom = partition(12, [1.0, 5.0], quantum=2)
+    dom = partition(12, [1.0, 5.0], quantum=2, min_per_replica=2)
     assert dom.total == 12
     assert all(a % 2 == 0 for a in dom.allocations)
-    assert min(dom.allocations) >= 2       # min_per_replica=1, quantum 2
+    assert min(dom.allocations) >= 2
     with pytest.raises(ValueError):
         partition(3, [1.0, 1.0], quantum=2)      # not a quantum multiple
     with pytest.raises(ValueError):
         partition(2, [1.0, 1.0, 1.0])            # fewer mbs than replicas
     with pytest.raises(ValueError):
         partition(4, [1.0, 0.0])                 # non-positive throughput
+
+
+def test_partition_refuses_non_multiple_floor():
+    """Satellite (ISSUE 8): the old code silently rounded a non-multiple
+    min_per_replica UP to whole quanta (floor_q = ceil(min/quantum)),
+    over-granting the documented floor and raising "cannot give…" for
+    totals the caller's floor would have admitted.  Now it refuses
+    loudly; multiples are honored exactly."""
+    with pytest.raises(ValueError, match="not a multiple of"):
+        partition(12, [1.0, 5.0], quantum=2, min_per_replica=1)
+    with pytest.raises(ValueError, match="not a multiple of"):
+        partition(12, [1.0, 1.0], quantum=4, min_per_replica=6)
+    # the old rounding refused this satisfiable split: floor 2 per
+    # replica × 3 replicas = 6 units of quantum 2 fit in 12 exactly
+    dom = partition(12, [1.0, 1.0, 1.0], quantum=2, min_per_replica=2)
+    assert dom.total == 12 and min(dom.allocations) >= 2
+
+
+def test_domain_cost_tied_pacing_lowest_index():
+    """Satellite (ISSUE 8): equal pacing times resolve deterministically
+    to the LOWEST replica index (strict ``>`` argmax, not a
+    float-equality ``.index`` lookup)."""
+    from repro.core.dataparallel import BatchDomain
+    tied = BatchDomain(allocations=(4, 4, 2), throughputs=(1.0, 1.0, 0.5))
+    c = domain_cost(tied)          # times (4.0, 4.0, 4.0) — all tied
+    assert c["replica_times"] == pytest.approx([4.0, 4.0, 4.0])
+    assert c["pacing_replica"] == 0
+    assert c["iter_time"] == pytest.approx(4.0)
+    # a genuinely larger later replica still wins
+    c2 = domain_cost(BatchDomain((2, 6), (1.0, 1.0)))
+    assert c2["pacing_replica"] == 1
 
 
 @settings(max_examples=40)
@@ -71,6 +102,86 @@ def test_partition_properties(dp_scale, extra, rates):
         raw = total * r / tot_rate
         assert a >= 1 and abs(a - raw) < 1.0 + 1e-9 or a == 1, \
             (dom.allocations, raw)
+
+
+@settings(max_examples=30)
+@given(st.integers(min_value=1, max_value=16),
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from([(1.0, 1.0), (1.0, 2.0), (0.5, 1.0, 4.0),
+                        (3.0, 2.0, 1.0, 1.0)]))
+def test_partition_quantum_properties(units, quantum, rates):
+    """Satellite (ISSUE 8) properties: under any quantum the sum is
+    preserved exactly, every allocation is a whole number of quanta, and
+    the floor (one quantum here) is respected."""
+    dp = len(rates)
+    total = max(units, dp) * quantum
+    dom = partition(total, rates, quantum=quantum,
+                    min_per_replica=quantum)
+    assert dom.total == total
+    assert all(a % quantum == 0 for a in dom.allocations)
+    assert min(dom.allocations) >= quantum
+
+
+@settings(max_examples=30)
+@given(st.integers(min_value=0, max_value=10),
+       st.sampled_from([(1.0, 2.0), (1.0, 1.0, 3.0),
+                        (0.5, 1.0, 2.0, 4.0)]))
+def test_partition_monotone_in_throughput(extra, rates):
+    """Satellite (ISSUE 8) property: bumping one replica's throughput
+    never SHRINKS its allocation (with the others held fixed)."""
+    dp = len(rates)
+    total = 2 * dp + extra
+    base = partition(total, rates)
+    for i in range(dp):
+        bumped = list(rates)
+        bumped[i] *= 2.5
+        dom = partition(total, bumped)
+        assert dom.allocations[i] >= base.allocations[i], \
+            (i, rates, base.allocations, dom.allocations)
+        assert dom.total == total
+
+
+@settings(max_examples=25)
+@given(st.sampled_from(["1f1b", "gpipe", "zb_h1"]),
+       st.integers(min_value=1, max_value=4),
+       st.sampled_from([(5, 3), (2, 1), (4, 2, 1), (1, 6), (3, 3, 1)]))
+def test_domain_tick_tables_padding_properties(schedule, S, allocations):
+    """Satellite (ISSUE 8) properties of the per-replica tick padding
+    (DESIGN.md §13): each replica's un-padded prefix IS the schedule's
+    own program for its allocation, the pad region is fully inert
+    (active = emit = False), and no ACTIVE op ever consumes a padded
+    tick's output — every consumed neighbor/local value was produced by
+    an ACTIVE tick, so padded ticks contribute exactly zero to loss and
+    grads."""
+    import numpy as np
+    from repro.core import heteropp as HP
+    stacked = HP.domain_tick_tables(schedule, S, allocations)
+    pacing = HP.spmd_tick_tables(schedule, S, max(allocations))
+    assert stacked.ticks == pacing.ticks          # priced == executed
+    assert stacked.mb.shape == (stacked.ticks, len(allocations), S)
+    for r, a in enumerate(allocations):
+        own = HP.spmd_tick_tables(schedule, S, a)
+        assert (stacked.mb[:own.ticks, r] == own.mb).all()
+        assert (stacked.active[:own.ticks, r] == own.active).all()
+        assert (stacked.emit[:own.ticks, r] == own.emit).all()
+        assert not stacked.active[own.ticks:, r].any()   # pad is inert
+        assert not stacked.emit[own.ticks:, r].any()
+        # every emitting replica covers each of ITS microbatches once
+        assert int(stacked.emit[:, r].sum()) == a
+        # no active op consumes a padded (inactive) tick's output
+        act, src = stacked.active[:, r], stacked.src[:, r]
+        for t in range(stacked.ticks):
+            for s in range(S):
+                if not act[t, s] or src[t, s] == HP.SRC_INJECT:
+                    continue
+                if src[t, s] == HP.SRC_PREV:
+                    prod = (s - 1) % S
+                elif src[t, s] == HP.SRC_NEXT:
+                    prod = (s + 1) % S
+                else:                              # SRC_LOCAL
+                    prod = s
+                assert t > 0 and act[t - 1, prod], \
+                    (schedule, S, allocations, r, t, s)
 
 
 def test_domain_cost_closed_forms():
@@ -248,7 +359,8 @@ def _plan(dp=2, b=4, domain=None, schedule="1f1b"):
 def test_from_plan_dp_modes():
     """from_plan: dp stays a cost-model dimension by default; with
     execute_dp=True a uniform plan sets spec.data_parallel and a
-    non-uniform batch domain is refused with a clear error."""
+    non-uniform batch domain threads into per-replica tick programs
+    (spec.batch_domain — DESIGN.md §13)."""
     from repro.core import heteropp as HP
     uni = _plan()
     assert HP.from_plan(uni).data_parallel == 1
@@ -258,11 +370,16 @@ def test_from_plan_dp_modes():
     assert spec.tensor_parallel == 2 and spec.data_parallel == 2
     hetero = _plan(dp=2, b=5, domain=(5, 3))
     assert HP.from_plan(hetero).data_parallel == 1    # legacy path intact
-    with pytest.raises(ValueError, match="non-uniform batch domain"):
-        HP.from_plan(hetero, execute_dp=True)
+    spec = HP.from_plan(hetero, execute_dp=True)
+    assert spec.data_parallel == 2 and spec.batch_domain == (5, 3)
+    assert spec.microbatches == 5          # the pacing allocation
+    assert spec.total_microbatches == 8
+    # an explicit microbatches override cannot rescale the split
+    with pytest.raises(ValueError, match="cannot rescale"):
+        HP.from_plan(hetero, microbatches=4, execute_dp=True)
     # a uniform EXPLICIT domain is executable (it IS the uniform split)
-    assert HP.from_plan(_plan(domain=(4, 4)),
-                        execute_dp=True).data_parallel == 2
+    spec = HP.from_plan(_plan(domain=(4, 4)), execute_dp=True)
+    assert spec.data_parallel == 2 and spec.batch_domain == ()
 
 
 def test_plan_json_roundtrip_preserves_batch_domain():
@@ -306,10 +423,13 @@ def test_search_uneven_dp_carries_batch_domain():
     assert sorted(r.plan.batch_domain) == [1, 1, 2, 2]
     assert r.plan.microbatches == 2 == max(r.plan.batch_domain)
     assert r.plan.batch_seqs == 6
-    # and the runtime refuses to execute the non-uniform domain
+    # and the runtime EXECUTES the non-uniform domain (DESIGN.md §13)
     from repro.core import heteropp as HP
-    with pytest.raises(ValueError, match="non-uniform batch domain"):
-        HP.from_plan(r.plan, execute_dp=True)
+    spec = HP.from_plan(r.plan, execute_dp=True)
+    assert spec.batch_domain == tuple(r.plan.batch_domain)
+    assert spec.total_microbatches == 6
+    from repro.core.heteroauto import runtime_path
+    assert runtime_path(r.plan).endswith("+uneven-dp")
 
 
 def test_search_divisible_dp_stays_uniform():
@@ -422,8 +542,10 @@ def test_train_refuses_data_parallel_without_pipeline():
 def test_spmd_dp_pipeline_subprocess():
     """3-D (dp × pipe × tp) pipeline on 8 virtual devices: dp=2 matches
     the dp=1 pipeline and the monolithic model; both grad-sync modes
-    agree; uniform-dp plans execute, non-uniform batch domains are
-    refused (DESIGN.md §9)."""
+    agree; uniform-dp plans execute bit-identically to the direct spec
+    (DESIGN.md §9).  Non-uniform domains are covered by
+    run_spmd_uneven_dp_pipeline.py / test_uneven_dp_exec.py
+    (DESIGN.md §13)."""
     script = os.path.join(ROOT, "tests", "helpers",
                           "run_spmd_dp_pipeline.py")
     r = subprocess.run([sys.executable, script], capture_output=True,

@@ -98,6 +98,31 @@ def test_cache_plan_policies():
     assert plan["cache_len"] == 32768                      # full cache
 
 
+def test_percentile_nearest_rank():
+    """Satellite (ISSUE 8): the launcher's p95 used the biased
+    ``int(n·0.95)`` index — p95 of 20 sorted samples returned the MAX
+    (index 19) instead of the nearest-rank 19th smallest (index 18), and
+    for small n it could collapse onto p50.  The nearest-rank definition
+    is ``sorted[ceil(q·n) − 1]``."""
+    from repro.launch.serve import percentile
+    samples = list(range(1, 21))             # 1..20, already sorted
+    assert percentile(samples, 0.95) == 19   # ceil(0.95·20)=19 → idx 18
+    assert percentile(samples, 0.50) == 10   # the 10th smallest
+    assert percentile(samples, 1.00) == 20   # the max, only at q=1
+    # old bias: srt[min(n-1, int(n*0.95))] == srt[19] == 20 (the max)
+    assert samples[min(19, int(20 * 0.95))] == 20
+    # small n: p95 and p50 stay distinct ranks where n allows
+    assert percentile([1.0, 2.0, 3.0], 0.95) == 3.0   # ceil(2.85)=3
+    assert percentile([1.0, 2.0, 3.0], 0.50) == 2.0   # ceil(1.5)=2
+    assert percentile([7.0], 0.95) == 7.0
+    with pytest.raises(ValueError):
+        percentile([], 0.95)
+    with pytest.raises(ValueError):
+        percentile([1.0], 0.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], 1.5)
+
+
 def test_serve_step_emits_next_token():
     cfg = exact_cfg("qwen1p5_0p5b")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
