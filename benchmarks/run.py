@@ -4,14 +4,39 @@
 prints ``name,value,derived`` CSV rows per benchmark and writes the same
 rows machine-readably to ``BENCH_ablation.json`` (suite → row list), so
 the perf trajectory of the ablation tables is diffable across PRs.
+Every row (and the top level) is stamped with the dump schema version
+and the producing git sha, so a historical dump is attributable to the
+exact tree that produced it.
 """
 import argparse
 import importlib
 import json
+import subprocess
 import sys
 import traceback
 
 from . import common
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    """Short sha of the producing tree, or ``"unknown"`` outside git."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def stamp_rows(rows, sha):
+    """Attach provenance to every row dict (in place; returned)."""
+    for row in rows:
+        row["schema_version"] = BENCH_SCHEMA_VERSION
+        row["git_sha"] = sha
+    return rows
 
 SUITES = [
     "bench_precision",     # Fig 5 / Table 1  (DiTorch alignment)
@@ -34,6 +59,7 @@ def main() -> None:
     suites = [s for s in SUITES if args.only in (None, s)]
     failed = []
     rows_by_suite = {}
+    sha = git_sha()
     for name in suites:
         print(f"# === {name} ===", flush=True)
         start = len(common.ROWS)
@@ -43,12 +69,14 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
-        rows_by_suite[name] = [
+        rows_by_suite[name] = stamp_rows([
             {"name": n, "value": str(v), "detail": d}
-            for n, v, d in common.ROWS[start:]]
+            for n, v, d in common.ROWS[start:]], sha)
     if args.json_out and args.only is None:
         with open(args.json_out, "w") as f:
-            json.dump({"suites": rows_by_suite, "failed": failed}, f,
+            json.dump({"schema_version": BENCH_SCHEMA_VERSION,
+                       "git_sha": sha, "suites": rows_by_suite,
+                       "failed": failed}, f,
                       indent=2)
         print(f"# rows written to {args.json_out}")
     elif args.json_out:

@@ -973,8 +973,14 @@ def _grouped_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
     send_t = jnp.asarray(send_np)
     recv_t = jnp.asarray(recv_np)
 
-    def replica_fn(stage_params, mask, tokens):
-        # Inside shard_map: leading device dim is local (size 1) -> squeeze.
+    d = cfg.d_model
+    dtype = layers.dtype_of(cfg)
+
+    def tick_step(stage_params, mask, tokens, carry, row):
+        # One tick of the grouped SPMD program, device-local (inside
+        # shard_map): shared by the lax.scan below and the host-driven
+        # per-tick tracer (repro.obs.runtime — DESIGN.md §14).
+        # Leading device dim is local (size 1) -> squeeze.
         blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
         mask_dev = mask[0]                        # (Lmax,)
         embed = stage_params["embed"]
@@ -992,50 +998,58 @@ def _grouped_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
 
         psum_cb = gpsum if tmax > 1 else None
 
+        x_prev, loss_acc, aux_acc, denom = carry
+        mb_row, src_row, act_row, emit_row = row
+        mb_idx = jnp.take(mb_row, sid)
+        src = jnp.take(src_row, sid)
+        active = jnp.take(act_row, sid)
+        take = active & jnp.take(emit_row, sid) & rank0
+        toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+                                            keepdims=False)
+        x0 = layers.embed_tokens(embed, toks).astype(dtype)
+        x = jnp.where(src == SRC_INJECT, x0, x_prev)
+        y, aux = _stage_forward(blocks, mask_dev, cfg, x, kind, remat,
+                                lcfg=lcfg, psum=psum_cb)
+        # the group output y is replicated across the stage's tp
+        # members (each sub-block closes with the group psum), so
+        # ONLY rank 0 counts its emitted microbatch's CE / tokens
+        h = layers.apply_norm(fnorm, y, cfg.norm)
+        targets = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+        lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+        ce = M.chunked_ce(embed, h, targets, lmask)
+        loss_acc = loss_acc + jnp.where(take, ce, 0.0)
+        denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
+        aux_acc = aux_acc + jnp.where(active & rank0, aux, 0.0)
+        # boundary transfer: one fused gather of the send-masked
+        # outputs, then each device mixes its sources' contributions
+        # (disjoint sr_ag shards sum to the full activation; naive
+        # rows pick their matched source) — the next tick's x_prev
+        g = jax.lax.all_gather(y * srow.astype(y.dtype), axis)
+        x_prev2 = jnp.tensordot(rrow.astype(y.dtype), g, axes=(0, 0))
+        return (x_prev2, loss_acc, aux_acc, denom)
+
+    def replica_fn(stage_params, mask, tokens):
         mb_size, S_seq = tokens.shape[1], tokens.shape[2]
-        d = cfg.d_model
-        dtype = layers.dtype_of(cfg)
-
-        def tick(carry, row):
-            x_prev, loss_acc, aux_acc, denom = carry
-            mb_row, src_row, act_row, emit_row = row
-            mb_idx = jnp.take(mb_row, sid)
-            src = jnp.take(src_row, sid)
-            active = jnp.take(act_row, sid)
-            take = active & jnp.take(emit_row, sid) & rank0
-            toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
-                                                keepdims=False)
-            x0 = layers.embed_tokens(embed, toks).astype(dtype)
-            x = jnp.where(src == SRC_INJECT, x0, x_prev)
-            y, aux = _stage_forward(blocks, mask_dev, cfg, x, kind, remat,
-                                    lcfg=lcfg, psum=psum_cb)
-            # the group output y is replicated across the stage's tp
-            # members (each sub-block closes with the group psum), so
-            # ONLY rank 0 counts its emitted microbatch's CE / tokens
-            h = layers.apply_norm(fnorm, y, cfg.norm)
-            targets = jnp.concatenate(
-                [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
-            lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
-            ce = M.chunked_ce(embed, h, targets, lmask)
-            loss_acc = loss_acc + jnp.where(take, ce, 0.0)
-            denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
-            aux_acc = aux_acc + jnp.where(active & rank0, aux, 0.0)
-            # boundary transfer: one fused gather of the send-masked
-            # outputs, then each device mixes its sources' contributions
-            # (disjoint sr_ag shards sum to the full activation; naive
-            # rows pick their matched source) — the next tick's x_prev
-            g = jax.lax.all_gather(y * srow.astype(y.dtype), axis)
-            x_prev2 = jnp.tensordot(rrow.astype(y.dtype), g, axes=(0, 0))
-            return (x_prev2, loss_acc, aux_acc, denom), None
-
         x_init = jnp.zeros((mb_size, S_seq, d), dtype)
         zero = jnp.zeros((1,), jnp.float32)
         (_, loss_sum, aux_sum, denom), _ = jax.lax.scan(
-            tick, (x_init, zero, zero, zero), xs)
+            lambda c, r: (tick_step(stage_params, mask, tokens, c, r),
+                          None),
+            (x_init, zero, zero, zero), xs)
         loss_sum = jax.lax.psum(loss_sum, axis)
         denom = jax.lax.psum(denom, axis)
         aux_sum = jax.lax.psum(aux_sum, axis) / nstages
         return loss_sum, denom, aux_sum
+
+    # hooks for the host-driven per-tick tracer (repro.obs.runtime)
+    replica_fn.tick_step = tick_step
+    replica_fn.tick_tables = tables
+    replica_fn.tick_xs = xs
+    replica_fn.carry_shapes = lambda mb_size, S_seq: (
+        (((mb_size, S_seq, d), dtype),)
+        + ((((1,), jnp.float32),) * 3))
+    replica_fn.denom_units = 1
 
     aps = abstract_stage_params(cfg, spec)
     from ..sharding import rules
@@ -1142,80 +1156,80 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
           jnp.asarray(tables.src), jnp.asarray(tables.active),
           jnp.asarray(tables.emit))
 
-    def replica_fn(stage_params, mask, tokens):
-        # Inside shard_map: leading stage dim is local (size 1) -> squeeze.
+    d = cfg.d_model
+    dtype = layers.dtype_of(cfg)
+
+    def tick_step(stage_params, mask, tokens, carry, row):
+        # One tick of the SPMD program, device-local (inside shard_map):
+        # shared by the lax.scan below and the host-driven per-tick
+        # tracer (repro.obs.runtime.trace_spmd_pipeline — DESIGN.md §14)
         blocks = jax.tree.map(lambda x: x[0], stage_params["blocks"])
         mask_dev = mask[0]           # (Lmax,) or (v, Lcmax)
         embed = stage_params["embed"]
         fnorm = stage_params["final_norm"]
         sid = jax.lax.axis_index(axis)
-        # non-uniform domains stack per-replica programs on a middle dp
-        # dim; each replica selects ITS OWN row (DESIGN.md §13)
-        ridx = jax.lax.axis_index(spec.dp_axis) if spec.batch_domain \
-            else None
-
-        mb_size, S_seq = tokens.shape[1], tokens.shape[2]
-        d = cfg.d_model
-        dtype = layers.dtype_of(cfg)
-
-        def tick(carry, row):
-            x_prev, x_next, y_loc, loss_acc, aux_acc, denom = carry
-            if ridx is not None:
-                row = tuple(jnp.take(a, ridx, axis=0) for a in row)
-            mb_row, ck_row, src_row, act_row, emit_row = row
-            mb_idx = jnp.take(mb_row, sid)
-            src = jnp.take(src_row, sid)
-            active = jnp.take(act_row, sid)
-            take = active & jnp.take(emit_row, sid)
-            toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+        x_prev, x_next, y_loc, loss_acc, aux_acc, denom = carry
+        if spec.batch_domain:
+            # non-uniform domains stack per-replica programs on a middle
+            # dp dim; each replica selects ITS OWN row (DESIGN.md §13)
+            ridx = jax.lax.axis_index(spec.dp_axis)
+            row = tuple(jnp.take(a, ridx, axis=0) for a in row)
+        mb_row, ck_row, src_row, act_row, emit_row = row
+        mb_idx = jnp.take(mb_row, sid)
+        src = jnp.take(src_row, sid)
+        active = jnp.take(act_row, sid)
+        take = active & jnp.take(emit_row, sid)
+        toks = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0,
+                                            keepdims=False)
+        # route the input: fresh embedding for injection ops, else the
+        # neighbor (or own, for the zb_v turn) output of tick t-1
+        x0 = layers.embed_tokens(embed, toks).astype(dtype)
+        x = jnp.where(src == SRC_INJECT, x0, x_prev)
+        if needs_next:
+            x = jnp.where(src == SRC_NEXT, x_next, x)
+        if needs_local:
+            x = jnp.where(src == SRC_LOCAL, y_loc, x)
+        if v > 1:
+            ck = jnp.take(ck_row, sid)
+            blk = jax.tree.map(
+                lambda p: jax.lax.dynamic_index_in_dim(
+                    p, ck, 0, keepdims=False), blocks)
+            mrow = jax.lax.dynamic_index_in_dim(mask_dev, ck, 0,
                                                 keepdims=False)
-            # route the input: fresh embedding for injection ops, else the
-            # neighbor (or own, for the zb_v turn) output of tick t-1
-            x0 = layers.embed_tokens(embed, toks).astype(dtype)
-            x = jnp.where(src == SRC_INJECT, x0, x_prev)
-            if needs_next:
-                x = jnp.where(src == SRC_NEXT, x_next, x)
-            if needs_local:
-                x = jnp.where(src == SRC_LOCAL, y_loc, x)
-            if v > 1:
-                ck = jnp.take(ck_row, sid)
-                blk = jax.tree.map(
-                    lambda p: jax.lax.dynamic_index_in_dim(
-                        p, ck, 0, keepdims=False), blocks)
-                mrow = jax.lax.dynamic_index_in_dim(mask_dev, ck, 0,
-                                                    keepdims=False)
-            else:
-                blk, mrow = blocks, mask_dev
-            y, aux = _stage_forward(blk, mrow, cfg, x, kind, remat,
-                                    tp_axis=tp_axis, lcfg=lcfg)
-            # the member hosting the last global stage computes the LM
-            # loss for its finished microbatch
-            h = layers.apply_norm(fnorm, y, cfg.norm)
-            targets = jnp.concatenate(
-                [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
-            lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
-            ce = M.chunked_ce(embed, h, targets, lmask)
-            loss_acc = loss_acc + jnp.where(take, ce, 0.0)
-            denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
-            aux_acc = aux_acc + jnp.where(active, aux, 0.0)
-            # shift activations one hop each way for the next tick
-            if needs_prev:
-                perm_f = [(i, (i + 1) % nstages)
-                          for i in range(nstages if wraps_prev
-                                         else nstages - 1)]
-                x_prev2 = jax.lax.ppermute(y, axis, perm_f)
-            else:
-                x_prev2 = x_prev
-            if needs_next:
-                perm_b = [(i, i - 1) for i in range(1, nstages)]
-                if wraps_next:
-                    perm_b.append((0, nstages - 1))
-                x_next2 = jax.lax.ppermute(y, axis, perm_b)
-            else:
-                x_next2 = x_next
-            y_loc2 = y if needs_local else y_loc
-            return (x_prev2, x_next2, y_loc2, loss_acc, aux_acc, denom), None
+        else:
+            blk, mrow = blocks, mask_dev
+        y, aux = _stage_forward(blk, mrow, cfg, x, kind, remat,
+                                tp_axis=tp_axis, lcfg=lcfg)
+        # the member hosting the last global stage computes the LM
+        # loss for its finished microbatch
+        h = layers.apply_norm(fnorm, y, cfg.norm)
+        targets = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1)
+        lmask = jnp.ones_like(toks, jnp.float32).at[:, -1].set(0.0)
+        ce = M.chunked_ce(embed, h, targets, lmask)
+        loss_acc = loss_acc + jnp.where(take, ce, 0.0)
+        denom = denom + jnp.where(take, jnp.sum(lmask), 0.0)
+        aux_acc = aux_acc + jnp.where(active, aux, 0.0)
+        # shift activations one hop each way for the next tick
+        if needs_prev:
+            perm_f = [(i, (i + 1) % nstages)
+                      for i in range(nstages if wraps_prev
+                                     else nstages - 1)]
+            x_prev2 = jax.lax.ppermute(y, axis, perm_f)
+        else:
+            x_prev2 = x_prev
+        if needs_next:
+            perm_b = [(i, i - 1) for i in range(1, nstages)]
+            if wraps_next:
+                perm_b.append((0, nstages - 1))
+            x_next2 = jax.lax.ppermute(y, axis, perm_b)
+        else:
+            x_next2 = x_next
+        y_loc2 = y if needs_local else y_loc
+        return (x_prev2, x_next2, y_loc2, loss_acc, aux_acc, denom)
 
+    def replica_fn(stage_params, mask, tokens):
+        mb_size, S_seq = tokens.shape[1], tokens.shape[2]
         # accumulators are rank-1 (see _stage_forward): the zero inits are
         # closed-over constants that shard_map lifts to implicit
         # pipe-named inputs, and rank-0 ones cannot be transposed
@@ -1223,7 +1237,9 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         zero = jnp.zeros((1,), jnp.float32)
         carry = (x_init, x_init, x_init, zero, zero, zero)
         (_, _, _, loss_sum, aux_sum, denom), _ = jax.lax.scan(
-            tick, carry, xs)
+            lambda c, r: (tick_step(stage_params, mask, tokens, c, r),
+                          None),
+            carry, xs)
         # broadcast the emitting member's loss to every pipe member; emit
         # one (identical, shape-(1,)) copy per member — a replicated
         # scalar out_spec does not transpose under the legacy shard_map
@@ -1231,6 +1247,17 @@ def _pipeline_replica_core(cfg: ModelConfig, spec: PipelineSpec, mesh: Mesh,
         denom = jax.lax.psum(denom, axis)
         aux_sum = jax.lax.psum(aux_sum, axis) / nstages
         return loss_sum, denom, aux_sum
+
+    # hooks for the host-driven per-tick tracer (repro.obs.runtime):
+    # the SAME tick body the scan runs, plus the static program and the
+    # carry layout it needs to drive ticks one host call at a time
+    replica_fn.tick_step = tick_step
+    replica_fn.tick_tables = tables
+    replica_fn.tick_xs = xs
+    replica_fn.carry_shapes = lambda mb_size, S_seq: (
+        (((mb_size, S_seq, d), dtype),) * 3
+        + ((((1,), jnp.float32),) * 3))
+    replica_fn.denom_units = tp
 
     aps = abstract_stage_params(cfg, spec)
     from ..sharding import rules

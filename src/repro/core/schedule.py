@@ -168,7 +168,8 @@ def simulate_plan(plan, cfg, seq_len: int, *,
                   measured=None, grad_sync: bool = False,
                   sync_mode: Optional[str] = None,
                   dp_transport: Optional[str] = None,
-                  bucket_bytes: Optional[int] = None) -> SimResult:
+                  bucket_bytes: Optional[int] = None,
+                  record_spans: bool = False) -> SimResult:
     """Replay a HeteroAuto plan through its (or the given) schedule.
     ``wgrad_frac=None`` (default) uses the profiler's analytic per-stage
     dgrad/wgrad split — or, per chip, a wall-clock measured fraction
@@ -191,4 +192,4 @@ def simulate_plan(plan, cfg, seq_len: int, *,
         if grad_sync else None
     return simulate(sched, tf, tb, b, tp2p, overlap=overlap, t_update=tu,
                     wgrad_frac=wf if wgrad_frac is None else wgrad_frac,
-                    sync_events=events)
+                    sync_events=events, record_spans=record_spans)

@@ -15,10 +15,10 @@ pipeline.
 from .base import (Op, Schedule, ScheduleLike, available_schedules,
                    get_schedule, register)
 from .library import GPipe, Interleaved1F1B, OneFOneB, Wave, ZBH1, ZBV
-from .simulator import SimResult, SyncEvent, simulate
+from .simulator import OpSpan, SimResult, SyncEvent, simulate
 
 __all__ = [
     "Op", "Schedule", "ScheduleLike", "available_schedules", "get_schedule",
     "register", "GPipe", "Interleaved1F1B", "OneFOneB", "Wave", "ZBH1",
-    "ZBV", "SimResult", "SyncEvent", "simulate",
+    "ZBV", "OpSpan", "SimResult", "SyncEvent", "simulate",
 ]

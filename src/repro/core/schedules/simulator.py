@@ -56,6 +56,24 @@ class SyncEvent:
     gstages: Tuple[int, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class OpSpan:
+    """One timed interval on one stage's timeline, recorded by
+    ``simulate(record_spans=True)`` for the trace export
+    (``repro.obs.trace`` — DESIGN.md §14).  ``kind`` is F/B/D/W for
+    compute ops (``mb``/``chunk``/``g`` from the op), ``"sync"`` for a
+    dp grad-sync bucket drain (``mb`` is the drain order index, ``g``
+    the bucket's first gated chunk-stage), ``"U"`` for the optimizer
+    update tail (``mb``/``chunk``/``g`` are -1)."""
+    stage: int
+    kind: str
+    mb: int
+    chunk: int
+    g: int
+    start: float
+    end: float
+
+
 @dataclasses.dataclass
 class SimResult:
     makespan: float
@@ -70,6 +88,9 @@ class SimResult:
     # per GLOBAL chunk-stage g: completion time of the last op that
     # finalizes g's weight gradients (W, or B for single-B schedules)
     grad_last: List[float] = dataclasses.field(default_factory=list)
+    # per-op timeline (empty unless simulate(record_spans=True)):
+    # every F/B/D/W op plus sync drains and update tails
+    spans: List[OpSpan] = dataclasses.field(default_factory=list)
 
 
 def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
@@ -77,8 +98,8 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
              t_p2p: Sequence[float], *, overlap: bool = True,
              t_update: Optional[Sequence[float]] = None,
              wgrad_frac: Union[float, Sequence[float]] = 0.5,
-             sync_events: Optional[Sequence[Sequence[SyncEvent]]] = None
-             ) -> SimResult:
+             sync_events: Optional[Sequence[Sequence[SyncEvent]]] = None,
+             record_spans: bool = False) -> SimResult:
     """t_fwd/t_bwd: per-stage per-microbatch compute times (len S; t_bwd is
     the FULL backward — for backward-split schedules it is divided into
     dgrad = (1−wgrad_frac)·t_bwd and wgrad = wgrad_frac·t_bwd;
@@ -88,7 +109,11 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
     ``sync_events``: optional per-physical-stage bucket lists (len S) —
     see the module docstring for the readiness/drain/exposure rules.
     ``t_update`` runs after the stage's sync tail (the optimizer needs
-    the synced grads) and counts as busy time."""
+    the synced grads) and counts as busy time.  ``record_spans=True``
+    additionally records every op's (start, end) interval — plus sync
+    drains and update tails — in ``SimResult.spans`` for the trace
+    export (``repro.obs.trace``); off by default so the search's hot
+    replay loop allocates nothing extra."""
     sched = get_schedule(schedule)
     S, b, v = len(t_fwd), microbatches, sched.n_chunks
     assert sched.supports(S, b), (sched.name, S, b)
@@ -119,6 +144,7 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
 
     dev = sched.device_of                     # global chunk-stage -> device
 
+    spans: List[OpSpan] = []
     fwd_done = [[None] * b for _ in range(G)]
     dgrad_done = [[None] * b for _ in range(G)]   # B sets this too
     grad_last = [0.0] * G                      # last W (or B) end per g
@@ -162,6 +188,9 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
                     start = max(free[s], dep)
                     dur = wdur[s]
                     grad_last[g] = max(grad_last[g], start + dur)
+                if record_spans:
+                    spans.append(OpSpan(s, op.kind, op.mb, op.chunk, g,
+                                        start, start + dur))
                 free[s] = start + dur
                 busy[s] += dur
                 idx[s] += 1
@@ -179,16 +208,27 @@ def simulate(schedule: ScheduleLike, t_fwd: Sequence[float],
                          key=lambda e: max((grad_last[g] for g in e.gstages),
                                            default=0.0))
             t = 0.0
-            for e in evs:
+            for k, e in enumerate(evs):
                 ready = max((grad_last[g] for g in e.gstages), default=0.0)
-                t = max(t, ready) + e.seconds
+                start = max(t, ready)
+                t = start + e.seconds
+                if record_spans and e.seconds > 0.0:
+                    spans.append(OpSpan(
+                        s, "sync", k, -1,
+                        e.gstages[0] if e.gstages else -1, start, t))
             sync_done[s] = t
             exposed[s] = max(0.0, t - free[s])
 
     # update runs after the stage's sync tail (the optimizer consumes the
     # synced grads) and is real work: it counts as busy, not bubble
     end = max(max(free[s], sync_done[s]) + t_update[s] for s in range(S))
+    if record_spans:
+        for s in range(S):
+            if t_update[s] > 0.0:
+                u0 = max(free[s], sync_done[s])
+                spans.append(OpSpan(s, "U", -1, -1, -1, u0,
+                                    u0 + t_update[s]))
     total_busy = [busy[s] + t_update[s] for s in range(S)]
     bubble = 1.0 - sum(total_busy) / (S * end) if end else 0.0
     return SimResult(end, total_busy, bubble, list(free), exposed,
-                     grad_last)
+                     grad_last, spans)

@@ -8,12 +8,13 @@
 elsewhere; ``pallas`` forces the kernels (interpret mode off-TPU — a
 correctness tool, not a fast path).  Decode reports per-step p50/p95
 latency and tokens/s so a kernel change is visible from the launcher
-output alone.
+output alone; the same numbers land as structured histogram/gauge rows
+in ``<run-dir>/metrics.jsonl`` (``repro.obs.metrics`` — DESIGN.md §14).
 """
 from __future__ import annotations
 
 import argparse
-import math
+import os
 import time
 
 import jax
@@ -22,23 +23,12 @@ import jax.numpy as jnp
 from ..configs import canonical, get_config, get_smoke_config, list_configs
 from ..data.pipeline import DataConfig, SyntheticTokens
 from ..models import model as M
+# re-exported for compat: the nearest-rank percentile moved to the
+# metrics registry with the observability subsystem (DESIGN.md §14)
+from ..obs.metrics import percentile  # noqa: F401
 from ..training import serve_step as SS
 
 BACKENDS = ["auto", "einsum", "pallas"]
-
-
-def percentile(sorted_samples, q: float) -> float:
-    """Nearest-rank percentile: the ⌈q·n⌉-th smallest of ``sorted_samples``
-    (index ``ceil(q·n) − 1``).  The old ``int(n·q)`` index is biased one
-    rank HIGH wherever q·n is an integer (p95 of 20 samples returned the
-    max instead of the 19th), and for small n could collapse p95 onto
-    p50."""
-    n = len(sorted_samples)
-    if n == 0:
-        raise ValueError("percentile of an empty sample list")
-    if not 0.0 < q <= 1.0:
-        raise ValueError(f"q must be in (0, 1]: {q}")
-    return sorted_samples[max(1, math.ceil(q * n)) - 1]
 
 
 def main():
@@ -53,6 +43,12 @@ def main():
                          "interpret mode off-TPU)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--run-dir", default=None,
+                    help="write decode latency histogram / tok-s rows to "
+                         "<run-dir>/metrics.jsonl (default runs/<arch>)")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="also emit an interim decode histogram row "
+                         "every N decode steps (0 = final row only)")
     args = ap.parse_args()
 
     name = canonical(args.arch)
@@ -60,6 +56,14 @@ def main():
     total = args.prompt_len + args.gen
     print(f"serving {cfg.name}: batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen} backend={args.backend}")
+
+    from ..obs import MetricsLogger, MetricsRegistry
+    reg = MetricsRegistry()
+    metrics = MetricsLogger(
+        args.run_dir or os.path.join("runs", cfg.name),
+        meta={"arch": cfg.name, "family": cfg.family, "mode": "serve",
+              "batch": args.batch, "prompt_len": args.prompt_len,
+              "gen": args.gen, "backend": args.backend})
 
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     src = SyntheticTokens(cfg, DataConfig(batch_size=args.batch,
@@ -77,6 +81,9 @@ def main():
     t_prefill = time.perf_counter() - t0
     print(f"prefill: {t_prefill * 1e3:.1f} ms "
           f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
+    reg.gauge("prefill_s").set(t_prefill)
+    reg.gauge("prefill_tok_per_s").set(
+        args.batch * args.prompt_len / t_prefill)
 
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     out = [tok]
@@ -84,25 +91,33 @@ def main():
     # steady-state, then time every step individually: the mean hides
     # exactly the tail the kernel work targets
     _ = jax.block_until_ready(decode(params, cache, tok, jnp.int32(plen)))
-    step_s = []
+    hist = reg.histogram("decode_latency_s")
     pos = plen
-    for _ in range(args.gen - 1):
+    for i in range(args.gen - 1):
         t1 = time.perf_counter()
         logits, tok, cache = decode(params, cache, tok, jnp.int32(pos))
         jax.block_until_ready(tok)
-        step_s.append(time.perf_counter() - t1)
+        hist.observe(time.perf_counter() - t1)
         out.append(tok)
         pos += 1
+        if args.log_every and (i + 1) % args.log_every == 0:
+            metrics.log_histogram("decode_latency_s", hist)
     gen = jnp.concatenate(out, axis=1)
-    if step_s:
-        srt = sorted(step_s)
-        p50 = percentile(srt, 0.50)
-        p95 = percentile(srt, 0.95)
-        tot = sum(step_s)
-        print(f"decode: {tot * 1e3:.1f} ms over {len(step_s)} steps — "
+    if hist.count:
+        s = hist.summary()
+        p50, p95, tot = s["p50"], s["p95"], s["mean"] * s["count"]
+        reg.gauge("decode_tok_per_s").set(
+            args.batch * hist.count / max(tot, 1e-9))
+        reg.gauge("decode_tok_per_s_p50").set(
+            args.batch / max(p50, 1e-9))
+        # the structured rows carry the numbers the summary line prints
+        metrics.log_histogram("decode_latency_s", hist)
+        metrics.log(**reg.snapshot())
+        print(f"decode: {tot * 1e3:.1f} ms over {hist.count} steps — "
               f"p50={p50 * 1e3:.2f} ms p95={p95 * 1e3:.2f} ms "
-              f"({args.batch * len(step_s) / max(tot, 1e-9):.0f} tok/s, "
+              f"({args.batch * hist.count / max(tot, 1e-9):.0f} tok/s, "
               f"{args.batch / max(p50, 1e-9):.0f} tok/s @p50)")
+    metrics.close()
     print(f"generated[0][:16] = {gen[0, :16].tolist()}")
 
 

@@ -42,6 +42,7 @@ dp > 1).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -64,7 +65,9 @@ def _pipeline_spec(args, cfg):
     plan (--plan), a fresh HeteroAuto search (--search), or the uniform
     CLI split.  Plans carry their searched sync config (dp_sync +
     bucket_bytes — DESIGN.md §10), so the plan paths refuse an explicit
-    --grad-sync exactly like the other plan-owned flags."""
+    --grad-sync exactly like the other plan-owned flags.  Returns
+    ``(spec, grad_sync, plan-or-None)`` — the plan rides along so the
+    observability layer can price its expectations (DESIGN.md §14)."""
     from ..core import heteropp as HP
 
     mb = args.microbatches
@@ -113,7 +116,7 @@ def _pipeline_spec(args, cfg):
             HP.validate_spec_tp(cfg, spec)
             # the plan's searched sync mode executes too (its
             # bucket_bytes already rode in through from_plan)
-            return spec, plan.dp_sync
+            return spec, plan.dp_sync, plan
         except (ValueError, NotImplementedError) as e:
             raise SystemExit(str(e)) from None
 
@@ -182,7 +185,65 @@ def _pipeline_spec(args, cfg):
                            n_chunks=sched.n_chunks, tensor_parallel=tp,
                            data_parallel=dp,
                            bucket_bytes=args.bucket_bytes)
-    return spec, grad_sync
+    return spec, grad_sync, None
+
+
+def _run_dir(args, cfg) -> str:
+    return args.run_dir or os.path.join("runs", cfg.name)
+
+
+def _export_obs(args, cfg, spec, mesh, plan, stage_params, mask, toks,
+                run_dir: str) -> None:
+    """--trace epilogue (DESIGN.md §14): predicted timeline from the
+    event simulator, executed timeline from the fenced per-tick
+    re-drive, alignment report + straggler sections, all written next
+    to ``metrics.jsonl``."""
+    from ..obs import align_traces, write_trace
+    from ..obs.align import per_replica_seconds, per_stage_seconds
+    from ..obs.runtime import trace_spmd_pipeline
+    from ..obs.straggler import replica_stragglers, stage_stragglers
+    from ..obs.trace import (predicted_trace_for_plan,
+                             predicted_trace_for_spec)
+    if plan is not None:
+        predicted, _ = predicted_trace_for_plan(
+            plan, cfg, args.seq, grad_sync=plan.dp > 1)
+    else:
+        predicted, _ = predicted_trace_for_spec(spec)
+    executed = trace_spmd_pipeline(cfg, spec, mesh, stage_params, mask,
+                                   toks)
+    report = align_traces(predicted, executed)
+    stragglers = {}
+    if plan is not None:
+        from ..core.cost_model import evaluate
+        cost = evaluate(plan, cfg, args.seq, args.batch * args.seq)
+        measured = per_stage_seconds(executed)
+        stages = sorted(measured)
+        stragglers["stage"] = stage_stragglers(
+            plan, cost, [measured[s] for s in stages],
+            factor=args.straggler_factor)
+    if spec.data_parallel > 1:
+        # expected ∝ allocations (uniform per-microbatch time): the
+        # median normalization makes the unit irrelevant
+        per_rep = per_replica_seconds(executed)
+        reps = sorted(per_rep)
+        stragglers["replica"] = replica_stragglers(
+            spec.batch_allocations, 1.0, [per_rep[r] for r in reps],
+            factor=args.straggler_factor)
+    report["stragglers"] = stragglers
+    write_trace(os.path.join(run_dir, "trace_predicted.json"), predicted)
+    write_trace(os.path.join(run_dir, "trace_executed.json"), executed)
+    import json
+    with open(os.path.join(run_dir, "align.json"), "w",
+              encoding="utf-8") as f:
+        json.dump(report, f, indent=2)
+    err = report["max_abs_rel_err"]
+    print(f"trace: {run_dir}/trace_executed.json "
+          f"ticks={report['executed_ticks']} "
+          f"(priced {report['priced_ticks']}, "
+          f"match={report['ticks_match']}) "
+          f"wall={executed['metadata']['wall_s']:.3f}s "
+          f"max_share_err={err if err is None else round(err, 4)}",
+          flush=True)
 
 
 def run_pipeline(args, cfg):
@@ -194,7 +255,7 @@ def run_pipeline(args, cfg):
     from ..optim import adamw
 
     devices = jax.devices()
-    spec, grad_sync = _pipeline_spec(args, cfg)
+    spec, grad_sync, plan = _pipeline_spec(args, cfg)
     pp, tp, dp = spec.num_stages, spec.tensor_parallel, spec.data_parallel
     if spec.grouped:
         # non-uniform per-stage tp: flat 1-D pipe mesh of Σ tp_k devices,
@@ -252,22 +313,55 @@ def run_pipeline(args, cfg):
     state = (stage_params, adamw.init_opt_state(stage_params),
              jnp.int32(0))
 
+    from ..obs import MetricsLogger
+    from ..obs.runtime import device_memory_highwater
+    run_dir = _run_dir(args, cfg)
+    meta = {"arch": cfg.name, "family": cfg.family, "mode": "pipeline",
+            "devices": need, "stages": pp, "tp": tp, "dp": dp,
+            "schedule": spec.schedule, "microbatches": mb,
+            "batch": args.batch, "seq": args.seq}
+    if plan is not None:
+        # the plan's priced expectations ride in the meta row so the
+        # drift/straggler reports are reproducible from the JSONL alone
+        from ..core.cost_model import evaluate
+        cost = evaluate(plan, cfg, args.seq, args.batch * args.seq)
+        meta.update(priced_iter_time_s=cost.iter_time,
+                    priced_tgs=cost.tgs,
+                    priced_exposed_sync_s=sum(cost.exposed_sync),
+                    priced_reshard_s=sum(cost.t_reshard))
+    metrics = MetricsLogger(run_dir, meta=meta)
+
     dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq,
                       seed=1234 + args.seed)
     loader = make_loader(cfg, dcfg)
     tokens_per_step = args.batch * args.seq
+    toks = None
     t0 = time.perf_counter()
+    t_last, i_last = t0, 0
     for i in range(args.steps):
         batch = next(loader)
         toks = batch["tokens"].reshape(total_mb, args.batch // total_mb,
                                        args.seq)
         state, m = step_fn(state, mask, {"tokens": toks})
         if (i + 1) % args.log_every == 0 or i == 0:
-            dt = time.perf_counter() - t0
+            now = time.perf_counter()
+            dt = now - t0
             tgs = tokens_per_step * (i + 1) / dt / need
+            row = {k: float(v) for k, v in m.items()}
+            metrics.log(step=i + 1,
+                        tokens_per_s=tokens_per_step * (i + 1) / dt,
+                        tgs=tgs,
+                        step_time_s=(now - t_last) / (i + 1 - i_last),
+                        peak_bytes_in_use=device_memory_highwater(),
+                        **row)
+            t_last, i_last = now, i + 1
             print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
                   f"TGS={tgs:.0f}", flush=True)
     loader.close()
+    if args.trace:
+        _export_obs(args, cfg, spec, mesh, plan, state[0], mask, toks,
+                    run_dir)
+    metrics.close()
 
 
 def main():
@@ -346,7 +440,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="cadence of BOTH the human step line and the "
+                         "metrics.jsonl row")
+    ap.add_argument("--run-dir", default=None,
+                    help="observability output directory (metrics.jsonl "
+                         "and, with --trace, the trace/alignment files; "
+                         "default runs/<arch>)")
+    ap.add_argument("--trace", action="store_true",
+                    help="after training, re-drive the pipeline's tick "
+                         "program host-fenced and write "
+                         "trace_predicted.json / trace_executed.json / "
+                         "align.json to --run-dir (DESIGN.md §14; "
+                         "pipeline runs only)")
+    ap.add_argument("--straggler-factor", type=float, default=1.5,
+                    help="with --trace: flag a stage/replica whose "
+                         "measured/priced ratio exceeds this factor × "
+                         "the cohort median")
     args = ap.parse_args()
 
     name = canonical(args.arch)
@@ -357,6 +467,13 @@ def main():
     if args.pipeline_parallel > 1 or args.plan or args.search:
         run_pipeline(args, cfg)
         return
+    if args.trace:
+        # the trace is a pipeline artifact (per-tick program re-drive);
+        # the GSPMD path has no tick program to trace — refuse rather
+        # than silently write nothing
+        raise SystemExit(
+            "--trace re-drives the shard_map pipeline's tick program; "
+            "add --pipeline-parallel N (or --plan/--search)")
     if args.tensor_parallel:
         # the GSPMD path below would silently ignore it — refuse instead
         raise SystemExit(
@@ -399,14 +516,30 @@ def main():
                                         jax.eval_shape(lambda: state))
                 print(f"resumed from {args.ckpt_dir} at step {int(state.step)}")
 
+        from ..obs import MetricsLogger
+        from ..obs.runtime import device_memory_highwater
+        metrics = MetricsLogger(
+            _run_dir(args, cfg),
+            meta={"arch": cfg.name, "family": cfg.family, "mode": "gspmd",
+                  "devices": len(jax.devices()), "batch": args.batch,
+                  "seq": args.seq})
         tokens_per_step = args.batch * args.seq
         t0 = time.perf_counter()
+        t_last, i_last = t0, 0
         for i in range(args.steps):
             batch = next(loader)
             state, m = step_fn(state, batch)
             if (i + 1) % args.log_every == 0 or i == 0:
-                dt = time.perf_counter() - t0
+                now = time.perf_counter()
+                dt = now - t0
                 tgs = tokens_per_step * (i + 1) / dt / len(jax.devices())
+                metrics.log(step=i + 1,
+                            tokens_per_s=tokens_per_step * (i + 1) / dt,
+                            tgs=tgs,
+                            step_time_s=(now - t_last) / (i + 1 - i_last),
+                            peak_bytes_in_use=device_memory_highwater(),
+                            **{k: float(v) for k, v in m.items()})
+                t_last, i_last = now, i + 1
                 print(f"step {i + 1:5d} loss={float(m['loss']):.4f} "
                       f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f} "
                       f"TGS={tgs:.0f}", flush=True)
@@ -414,6 +547,7 @@ def main():
                     (i + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt_dir, state, step=i + 1)
         loader.close()
+        metrics.close()
         if args.ckpt_dir:
             save_checkpoint(args.ckpt_dir, state, step=args.steps)
             print(f"checkpoint saved to {args.ckpt_dir}")

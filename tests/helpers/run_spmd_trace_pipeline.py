@@ -1,0 +1,124 @@
+"""Subprocess helper: the executed-trace path on 8 virtual devices
+(DESIGN.md §14).
+
+Covers the --trace contract end to end:
+
+* ``trace_spmd_pipeline`` on a (dp=2, pipe=2, tp=2) uniform spec — the
+  executed trace validates, its tick count equals the priced
+  ``spmd_tick_tables`` count, and its span count equals
+  dp × (active tick, stage) cells (one span per executed tick per
+  active stage);
+* alignment against ``predicted_trace_for_spec`` — ``ticks_match`` and
+  per-stage shares populated;
+* ``launch/train.py --plan <8-dev fixture> --trace`` writes
+  metrics.jsonl + both traces + align.json to --run-dir, and the
+  jax-free ``repro.obs.validate`` CLI (run with jax stubbed out)
+  accepts the directory with ``--require-trace``.
+
+Run as a script (spawned by tests/test_trace_exec.py) so the forced
+device count never leaks into the main pytest process.
+"""
+from repro.launch.hostdevices import force_host_device_count
+
+force_host_device_count(8)
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import get_smoke_config
+from repro.core import heteropp as HP
+from repro.models import model as M
+from repro.obs import align_traces, validate_trace
+from repro.obs.runtime import trace_spmd_pipeline
+from repro.obs.trace import predicted_trace_for_spec
+
+ROOT = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+
+
+def check_uniform_trace():
+    cfg = get_smoke_config("granite_8b")
+    spec = HP.PipelineSpec(2, HP.chunk_layer_counts([1, 1], "1f1b"),
+                           microbatches=2, schedule="1f1b",
+                           tensor_parallel=2, data_parallel=2)
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 2, 2),
+                ("dp", "pipe", "tp"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stage_params, mask = HP.split_stage_params(params, cfg, spec)
+    toks = jnp.zeros((4, 2, 16), jnp.int32)
+    executed = trace_spmd_pipeline(cfg, spec, mesh, stage_params, mask,
+                                   toks)
+    errs = validate_trace(executed)
+    assert not errs, errs
+    tables = HP.spmd_tick_tables("1f1b", 2, 2)
+    assert executed["metadata"]["ticks"] == tables.ticks, \
+        (executed["metadata"]["ticks"], tables.ticks)
+    nspans = len([e for e in executed["traceEvents"] if e["ph"] == "X"])
+    want = int(tables.active.sum()) * spec.data_parallel
+    assert nspans == want, (nspans, want)
+    ticks_seen = {e["args"]["tick"]
+                  for e in executed["traceEvents"] if e["ph"] == "X"}
+    assert ticks_seen == set(range(tables.ticks)), ticks_seen
+
+    predicted, _ = predicted_trace_for_spec(spec)
+    assert not validate_trace(predicted), validate_trace(predicted)
+    report = align_traces(predicted, executed)
+    assert report["ticks_match"], report
+    assert len(report["per_stage"]) == 2, report
+    assert all(st["executed_s"] > 0 for st in report["per_stage"]), report
+    print("uniform executed trace OK")
+
+
+def check_train_cli():
+    plan = os.path.join(ROOT, "tests", "fixtures",
+                        "plan_exp_c1_8dev.json")
+    run_dir = tempfile.mkdtemp(prefix="tracerun_")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "granite_8b", "--smoke", "--plan", plan, "--steps", "2",
+         "--batch", "8", "--seq", "32", "--log-every", "1", "--trace",
+         "--run-dir", run_dir],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "match=True" in r.stdout, r.stdout[-2000:]
+
+    # the validator must accept the directory WITHOUT jax on the path
+    r2 = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; sys.modules['jax'] = None; "
+         "from repro.obs.validate import main; "
+         f"sys.exit(main([{run_dir!r}, '--require-trace']))"],
+        capture_output=True, text=True, timeout=120, env=env, cwd=ROOT)
+    assert r2.returncode == 0, r2.stdout[-2000:] + r2.stderr[-2000:]
+    assert "OBS_SCHEMA_OK" in r2.stdout, r2.stdout
+
+    with open(os.path.join(run_dir, "align.json")) as f:
+        report = json.load(f)
+    assert report["ticks_match"], report
+    assert report["stragglers"]["stage"]["flagged"] == [], report
+    assert report["stragglers"]["replica"]["flagged"] == [], report
+    with open(os.path.join(run_dir, "metrics.jsonl")) as f:
+        rows = [json.loads(ln) for ln in f if ln.strip()]
+    steps = [row for row in rows if row.get("kind") == "metrics"]
+    assert len(steps) == 2, rows
+    for row in steps:
+        for key in ("loss", "grad_norm", "tokens_per_s", "tgs"):
+            assert key in row, (key, row)
+    print("train --trace CLI OK")
+
+
+if __name__ == "__main__":
+    check_uniform_trace()
+    check_train_cli()
+    print("TRACE_OK")

@@ -1,0 +1,337 @@
+"""Observability subsystem (ISSUE 9 — DESIGN.md §14): simulator→trace
+conformance over the ENTIRE schedule registry, trace/metrics schema
+validation (positive and negative), the straggler detector's
+median-normalized semantics, the alignment report, and the jax-free
+import contract of ``repro.obs``."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.schedule import plan_sync_events, simulate_plan
+from repro.core.schedules import available_schedules, get_schedule, simulate
+from repro.obs import (MetricsLogger, MetricsRegistry, align_traces,
+                       build_trace, detect_stragglers, percentile,
+                       sim_spans, validate_trace, write_trace)
+from repro.obs.align import per_replica_seconds, per_stage_seconds
+from repro.obs.straggler import replica_stragglers, stage_stragglers
+from repro.obs.validate import validate_metrics_lines, validate_run_dir
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+GRID = [(2, 4), (3, 6), (4, 8), (4, 12)]
+
+
+def _points(sched):
+    pts = [(S, b) for S, b in GRID if sched.supports(S, b)]
+    assert pts, f"schedule {sched.name} supports no grid point"
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# simulator → trace round-trip, whole registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", available_schedules())
+def test_sim_trace_roundtrip(name):
+    """Every op the schedule emits becomes exactly one span, and the
+    built trace passes the conformance validator (span count, per-track
+    monotonicity, no intra-track overlap)."""
+    sched = get_schedule(name)
+    for S, b in _points(sched):
+        t_fwd = [1.0 + 0.1 * s for s in range(S)]
+        t_bwd = [2.0 * t for t in t_fwd]
+        sim = simulate(sched, t_fwd, t_bwd, b, [0.05] * (S - 1),
+                       record_spans=True)
+        n_ops = sum(len(row) for row in sched.ops(S, b))
+        assert len(sim.spans) == n_ops, (name, S, b)
+        trace = build_trace(sim_spans(sim), source="predicted",
+                            schedule=name, num_stages=S,
+                            n_chunks=sched.n_chunks)
+        assert validate_trace(trace) == [], (name, S, b)
+        # spans replay the simulator's accounting exactly
+        busy = per_stage_seconds(trace, kinds=("F", "B", "D", "W"))
+        for s in range(S):
+            assert busy[s] == pytest.approx(sim.stage_busy[s]), (name, s)
+
+
+def test_sim_trace_records_sync_and_update():
+    """With grad-sync events and update tails the trace grows sync/U
+    spans on their own per-stage tracks and still validates."""
+    from repro.core.cost_model import ParallelPlan
+    with open(os.path.join(ROOT, "tests", "fixtures",
+                           "plan_exp_c1_8dev.json")) as f:
+        plan = ParallelPlan.from_dict(json.load(f))
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("granite_8b")
+    events = plan_sync_events(plan, cfg, 32)
+    assert any(evs for evs in events)       # dp=2: real bucket drains
+    sim = simulate_plan(plan, cfg, 32, grad_sync=True, record_spans=True)
+    kinds = {sp.kind for sp in sim.spans}
+    assert "sync" in kinds and "U" in kinds, kinds
+    trace = build_trace(sim_spans(sim), source="predicted",
+                        schedule=plan.schedule, num_stages=plan.total_pp)
+    assert validate_trace(trace) == []
+    tracks = {e["args"]["name"] for e in trace["traceEvents"]
+              if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert any("sync" in n for n in tracks), tracks
+    assert any("update" in n for n in tracks), tracks
+
+
+def test_sim_record_spans_off_by_default():
+    sim = simulate("1f1b", [1.0, 1.0], [2.0, 2.0], 4, [0.0])
+    assert sim.spans == []
+
+
+# ---------------------------------------------------------------------------
+# trace validator negatives
+# ---------------------------------------------------------------------------
+
+def _tiny_trace(**meta):
+    spans = [{"replica": 0, "stage": 0, "chunk": 0, "kind": "F",
+              "mb": 0, "g": 0, "start_s": 0.0, "end_s": 1.0}]
+    return build_trace(spans, source="predicted", num_stages=1, **meta)
+
+
+def test_validate_trace_rejects_bad_version():
+    tr = _tiny_trace()
+    tr["metadata"]["schema_version"] = 999
+    assert any("schema_version" in e for e in validate_trace(tr))
+
+
+def test_validate_trace_rejects_overlap():
+    spans = [
+        {"replica": 0, "stage": 0, "chunk": 0, "kind": "F", "mb": 0,
+         "g": 0, "start_s": 0.0, "end_s": 1.0},
+        {"replica": 0, "stage": 0, "chunk": 0, "kind": "F", "mb": 1,
+         "g": 0, "start_s": 0.5, "end_s": 1.5},
+    ]
+    tr = build_trace(spans, source="predicted", num_stages=1)
+    assert any("overlap" in e for e in validate_trace(tr))
+
+
+def test_validate_trace_executed_needs_ticks():
+    spans = [{"replica": 0, "stage": 0, "chunk": 0, "kind": "F",
+              "mb": 0, "g": 0, "start_s": 0.0, "end_s": 1.0}]
+    tr = build_trace(spans, source="executed")     # no tick args, no meta
+    errs = validate_trace(tr)
+    assert any("tick" in e for e in errs), errs
+    spans[0]["tick"] = 0
+    tr = build_trace(spans, source="executed", ticks=2)
+    assert any("spans cover" in e for e in validate_trace(tr))
+    tr = build_trace(spans, source="executed", ticks=1)
+    assert validate_trace(tr) == []
+
+
+# ---------------------------------------------------------------------------
+# metrics: percentile edges, registry, JSONL sink + validator
+# ---------------------------------------------------------------------------
+
+def test_percentile_edges():
+    assert percentile([7.0], 0.5) == 7.0           # n=1: every q
+    assert percentile([7.0], 0.95) == 7.0
+    assert percentile([3.0] * 10, 0.95) == 3.0     # all-equal samples
+    srt = sorted(range(1, 21))
+    assert percentile(srt, 0.95) == 19             # NOT the max
+    assert percentile(srt, 1.0) == 20
+    with pytest.raises(ValueError):
+        percentile([], 0.5)
+    with pytest.raises(ValueError):
+        percentile([1.0], 0.0)
+
+
+def test_registry_snapshot_flattens():
+    reg = MetricsRegistry()
+    reg.counter("steps").inc(3)
+    reg.gauge("lr").set(1e-3)
+    reg.gauge("unset")                       # never set -> omitted
+    h = reg.histogram("lat")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["steps"] == 3
+    assert snap["lr"] == pytest.approx(1e-3)
+    assert "unset" not in snap
+    assert snap["lat.count"] == 3 and snap["lat.p50"] == 2.0
+    with pytest.raises(ValueError):
+        reg.counter("steps").inc(-1)
+
+
+def test_metrics_logger_jsonl(tmp_path):
+    run_dir = str(tmp_path / "run")
+    with MetricsLogger(run_dir, meta={"arch": "x"}) as log:
+        log.registry.gauge("loss").set(1.5)
+        log.log(step=1, tokens_per_s=10.0)
+        h = log.registry.histogram("lat")
+        h.observe(0.1)
+        log.log_histogram("lat")
+    with open(os.path.join(run_dir, "metrics.jsonl")) as f:
+        lines = f.readlines()
+    assert validate_metrics_lines(lines) == []
+    rows = [json.loads(ln) for ln in lines]
+    assert rows[0]["kind"] == "meta" and rows[0]["arch"] == "x"
+    assert rows[1]["loss"] == 1.5 and rows[1]["tokens_per_s"] == 10.0
+    assert rows[2]["kind"] == "histogram" and rows[2]["count"] == 1
+
+
+def test_validate_metrics_lines_negatives():
+    assert validate_metrics_lines([]) == ["no rows"]
+    assert any("kind=meta" in e for e in validate_metrics_lines(
+        ['{"kind": "metrics", "ts": 1.0}']))
+    bad = ['{"kind": "meta", "schema_version": 1, "ts": 1.0}',
+           '{"kind": "bogus", "ts": 1.0}']
+    assert any("unknown kind" in e for e in validate_metrics_lines(bad))
+    meta_only = ['{"kind": "meta", "schema_version": 1, "ts": 1.0}']
+    assert any("no metrics" in e for e in validate_metrics_lines(meta_only))
+
+
+def test_validate_run_dir(tmp_path):
+    run_dir = str(tmp_path / "run")
+    assert any("not a directory" in e for e in validate_run_dir(run_dir))
+    with MetricsLogger(run_dir, meta={}) as log:
+        log.log(step=1, loss=2.0)
+    assert validate_run_dir(run_dir) == []
+    errs = validate_run_dir(run_dir, require_trace=True)
+    assert any("trace_executed" in e for e in errs)
+    tr = _tiny_trace(ticks=1)
+    write_trace(os.path.join(run_dir, "trace_predicted.json"), tr)
+    spans = [{"replica": 0, "stage": 0, "chunk": 0, "kind": "F",
+              "mb": 0, "g": 0, "start_s": 0.0, "end_s": 1.0, "tick": 0}]
+    write_trace(os.path.join(run_dir, "trace_executed.json"),
+                build_trace(spans, source="executed", ticks=1))
+    report = align_traces(tr, json.load(
+        open(os.path.join(run_dir, "trace_executed.json"))))
+    with open(os.path.join(run_dir, "align.json"), "w") as f:
+        json.dump(report, f)
+    assert validate_run_dir(run_dir, require_trace=True) == []
+    report["ticks_match"] = False
+    with open(os.path.join(run_dir, "align.json"), "w") as f:
+        json.dump(report, f)
+    assert any("ticks_match" in e
+               for e in validate_run_dir(run_dir))
+
+
+# ---------------------------------------------------------------------------
+# straggler detector: the synthetic slow-stage regression fixture
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_injected_delay():
+    expected = [1.0, 1.2, 0.9, 1.1]
+    measured = list(expected)
+    measured[2] *= 3.0                          # the injected slow stage
+    rep = detect_stragglers(measured, expected)
+    assert rep["flagged"] == [2], rep
+    assert rep["entries"][2]["ratio"] == pytest.approx(3.0)
+
+
+def test_straggler_balanced_and_uniform_slowdown_not_flagged():
+    expected = [1.0, 1.2, 0.9, 1.1]
+    assert detect_stragglers(list(expected), expected)["flagged"] == []
+    # every stage 2× the prediction = miscalibration, not a straggler
+    assert detect_stragglers([2 * e for e in expected],
+                             expected)["flagged"] == []
+
+
+def test_straggler_single_entry_and_errors():
+    assert detect_stragglers([5.0], [1.0])["flagged"] == []
+    with pytest.raises(ValueError):
+        detect_stragglers([1.0], [1.0, 2.0])
+    with pytest.raises(ValueError):
+        detect_stragglers([1.0], [1.0], factor=1.0)
+    # non-positive expected entries are skipped, not divided by
+    rep = detect_stragglers([1.0, 5.0], [0.0, 1.0])
+    assert rep["entries"][0]["ratio"] is None
+    assert rep["flagged"] == []
+
+
+def test_replica_stragglers_against_domain_cost():
+    alloc = (5, 3)
+    rep = replica_stragglers(alloc, 1.0, [5.0, 3.0])
+    assert rep["flagged"] == [] and rep["pacing_replica"] == 0
+    rep = replica_stragglers(alloc, 1.0, [5.0, 3.0 * 4])
+    assert rep["flagged"] == [1], rep
+
+
+def test_stage_stragglers_against_plan_cost():
+    from repro.configs import get_smoke_config
+    from repro.core.cost_model import ParallelPlan, evaluate
+    with open(os.path.join(ROOT, "tests", "fixtures",
+                           "plan_exp_c1_8dev.json")) as f:
+        plan = ParallelPlan.from_dict(json.load(f))
+    cfg = get_smoke_config("granite_8b")
+    cost = evaluate(plan, cfg, 32, 8 * 32)
+    b = plan.microbatches
+    resh = list(cost.t_reshard) or [0.0] * len(plan.stages)
+    expected = []
+    for st, tc, tr in zip(plan.stages, cost.t_comp, resh):
+        expected.extend([b * (tc + tr)] * st.pp)
+    assert stage_stragglers(plan, cost, expected)["flagged"] == []
+    slow = list(expected)
+    slow[1] *= 5.0
+    assert stage_stragglers(plan, cost, slow)["flagged"] == [1]
+
+
+# ---------------------------------------------------------------------------
+# alignment report
+# ---------------------------------------------------------------------------
+
+def test_align_synthetic():
+    sched = get_schedule("1f1b")
+    sim = simulate(sched, [1.0, 1.0], [2.0, 2.0], 2, [0.0],
+                   record_spans=True)
+    predicted = build_trace(
+        sim_spans(sim), source="predicted", schedule="1f1b",
+        num_stages=2, ticks=3,
+        extra_meta={"makespan_s": sim.makespan,
+                    "stage_busy_s": list(sim.stage_busy),
+                    "exposed_sync_s": list(sim.exposed_sync),
+                    "bubble_frac": sim.bubble_frac})
+    spans = []
+    for t in range(3):
+        for s in range(2):
+            spans.append({"replica": 0, "stage": s, "chunk": 0,
+                          "kind": "F", "mb": t, "g": s,
+                          "start_s": t * 0.1, "end_s": (t + 1) * 0.1,
+                          "tick": t})
+    executed = build_trace(spans, source="executed", schedule="1f1b",
+                           num_stages=2, ticks=3,
+                           extra_meta={"wall_s": 0.3})
+    report = align_traces(predicted, executed)
+    assert report["ticks_match"] and report["executed_ticks"] == 3
+    # identical per-stage seconds on both sides -> equal shares
+    assert report["max_abs_rel_err"] == pytest.approx(0.0)
+    assert report["executed_wall_s"] == pytest.approx(0.3)
+    assert report["pacing_stage"] in (0, 1)
+    assert per_replica_seconds(executed)[0] == pytest.approx(0.6)
+    bad = build_trace(spans, source="executed", schedule="1f1b",
+                      num_stages=2, ticks=4, extra_meta={"wall_s": 0.3})
+    assert not align_traces(predicted, bad)["ticks_match"]
+
+
+# ---------------------------------------------------------------------------
+# jax-free import contract
+# ---------------------------------------------------------------------------
+
+def test_obs_importable_without_jax():
+    """``repro.obs`` (and the validator CLI) must work where jax does
+    not exist — the CI schema gate runs exactly this way."""
+    code = (
+        "import sys; sys.modules['jax'] = None\n"
+        "from repro.obs import build_trace, validate_trace, percentile\n"
+        "from repro.obs.validate import validate_metrics_lines\n"
+        "tr = build_trace([{'replica': 0, 'stage': 0, 'chunk': 0,\n"
+        "                   'kind': 'F', 'mb': 0, 'g': 0,\n"
+        "                   'start_s': 0.0, 'end_s': 1.0}],\n"
+        "                 source='predicted')\n"
+        "assert validate_trace(tr) == []\n"
+        "assert percentile([1.0], 0.95) == 1.0\n"
+        "print('NOJAX_OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=120, env=env, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "NOJAX_OK" in r.stdout

@@ -114,7 +114,14 @@ def test_percentile_nearest_rank():
     # small n: p95 and p50 stay distinct ranks where n allows
     assert percentile([1.0, 2.0, 3.0], 0.95) == 3.0   # ceil(2.85)=3
     assert percentile([1.0, 2.0, 3.0], 0.50) == 2.0   # ceil(1.5)=2
-    assert percentile([7.0], 0.95) == 7.0
+    assert percentile([7.0], 0.95) == 7.0             # n=1: every q
+    assert percentile([7.0], 0.50) == 7.0
+    assert percentile([3.0] * 10, 0.95) == 3.0        # all-equal samples
+    assert percentile([3.0] * 10, 0.50) == 3.0
+    # the launcher re-exports the metrics registry's implementation
+    # (ISSUE 9: percentile moved to repro.obs.metrics)
+    from repro.obs.metrics import percentile as obs_percentile
+    assert percentile is obs_percentile
     with pytest.raises(ValueError):
         percentile([], 0.95)
     with pytest.raises(ValueError):
