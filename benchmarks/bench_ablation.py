@@ -324,6 +324,30 @@ def main(argv=None):
                  f"pacing b={max(alloc)} tick count "
                  f"({'MATCH' if ok else 'MISMATCH'})")
 
+    # static plan verifier (ISSUE 10 / DESIGN.md §15): the load-time
+    # gate must be cheap enough to run on EVERY from_plan — stamp its
+    # wall time on the searched Exp-C-1 plan (full analyzer: collective
+    # divergence + schedule safety + resources + kernel lint)
+    import time
+    from repro.analysis import analyze_plan, split
+    # execute_dp=False: a searched Exp-C-1 plan has non-uniform tp AND
+    # dp > 1, which the §12 grouped runtime only executes with dp as a
+    # cost-model dimension — analyze the surface from_plan can run
+    t0 = time.perf_counter()
+    diags = analyze_plan(plan, cfg, seq_len=4096, execute_dp=False)
+    dt = time.perf_counter() - t0
+    a_errs, a_warns = split(diags)
+    assert dt < 1.0, f"analyzer took {dt:.3f}s on the Exp-C-1 plan"
+    assert not a_errs, [d.format() for d in a_errs]
+    emit("table_analysis.wall_time", f"{dt * 1e3:.1f}ms",
+         f"full analyze_plan on the searched Exp-C-1 plan "
+         f"(S={plan.total_pp} b={plan.microbatches} dp={plan.dp}), "
+         f"gate budget <1s")
+    emit("table_analysis.diagnostics",
+         f"{len(a_errs)}E/{len(a_warns)}W",
+         "errors/warnings on the searched plan (a clean search must "
+         "produce a clean executable surface)")
+
     # Fig 12: small-scale e2e DDR vs TCP (8-layer model, TP4 PP2 DP2)
     small = dataclasses.replace(cfg, num_layers=8)
     g2 = [chips.ChipGroup(chips.CHIPS["A"], 8), chips.ChipGroup(chips.CHIPS["C"], 8)]

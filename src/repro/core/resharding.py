@@ -23,11 +23,11 @@ equivalence, the HLO byte accounting and the closed-form properties.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+# NOTE: no module-level jax import.  The closed forms (naive_cost /
+# sr_ag_cost / boundary_time / choose_strategy) are pure arithmetic the
+# jax-free layers (cost model, repro.analysis) consume; only the
+# runnable ``reshard`` below needs jax, and it imports it lazily.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,8 +92,8 @@ def choose_strategy(tp_src: int, tp_dst: int, *, nic_bw: float,
 # runnable shard_map implementation (virtual-device validated)
 # ---------------------------------------------------------------------------
 
-def reshard(x: jax.Array, mesh: Mesh, *, strategy: str = "sr_ag",
-            pipe_axis: str = "pipe", tp_axis: str = "tp") -> jax.Array:
+def reshard(x, mesh, *, strategy: str = "sr_ag",
+            pipe_axis: str = "pipe", tp_axis: str = "tp"):
     """Move a tp-sharded activation from pipe stage s to stage s+1.
 
     x is laid out P(pipe=stage, tp shards the feature dim).  Returns the
@@ -107,6 +107,7 @@ def reshard(x: jax.Array, mesh: Mesh, *, strategy: str = "sr_ag",
     Both produce identical values; they differ in which link carries how
     many bytes — asserted by tests and measured from HLO by the benchmarks.
     """
+    import jax
     npipe = mesh.shape[pipe_axis]
     perm = [(i, i + 1) for i in range(npipe - 1)]
 
@@ -125,6 +126,7 @@ def reshard(x: jax.Array, mesh: Mesh, *, strategy: str = "sr_ag",
             shard = xs.shape[-1]
             return jax.lax.dynamic_slice_in_dim(full, k * shard, shard, -1)
 
+    from jax.sharding import PartitionSpec as P
     from .jax_compat import shard_map
     spec = P(pipe_axis, None, tp_axis)
     return shard_map(f, mesh=mesh, in_specs=spec, out_specs=spec)(x)

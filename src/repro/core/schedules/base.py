@@ -211,6 +211,16 @@ class Schedule:
             self._tail_cache[key] = prof
         return prof
 
+    # ------------------------------------------------------------- analysis
+    def verify(self, num_stages: int, microbatches: int) -> list:
+        """Run the static safety passes (``repro.analysis``, DESIGN.md
+        §15) on this schedule at one (S, b) point: op coverage,
+        placement bijection, causal replay, inflight bound, α
+        cross-check, streamability, pad inertness.  Returns the
+        diagnostic list — empty means safe to execute."""
+        from ...analysis.schedule_safety import verify_schedule
+        return verify_schedule(self, num_stages, microbatches)
+
     def __repr__(self):
         return f"<Schedule {self.name}>"
 

@@ -21,8 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_BLOCK_Q = 128
-DEFAULT_BLOCK_K = 128
+# tiling constants live in the jax-free constraints module so the
+# static plan verifier can lint against them without importing pallas
+from .constraints import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q  # noqa: F401
+
 NEG_INF = -1e30
 
 

@@ -39,8 +39,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_PAGE = 128      # lane-tile-aligned KV page length
-MIN_GROUP = 8           # fp32 sublane tile: pad the GQA group up to this
+# tiling constants live in the jax-free constraints module so the
+# static plan verifier can lint against them without importing pallas
+from .constraints import DEFAULT_PAGE, MIN_GROUP  # noqa: F401 (re-export)
+
 NEG_INF = -1e30
 
 

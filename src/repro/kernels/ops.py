@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import constraints as _con
 from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import ref as _ref
@@ -89,9 +90,10 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0):
     if not causal:
         # padded k rows would win the softmax (no causal bound masks
         # them) — shrink the k block to a divisor of Sk instead of
-        # padding (non-causal callers: cross-attention, encoders)
-        while k.shape[1] % bk:
-            bk -= 1
+        # padding (non-causal callers: cross-attention, encoders); the
+        # rule lives in the jax-free constraints module so the plan
+        # verifier lints against the same legalization
+        bk = _con.shrink_block_k(k.shape[1], bk)
     q, Sq = _pad_seq(q, bq, 1)
     k, Sk = _pad_seq(k, bk, 1)
     v, _ = _pad_seq(v, bk, 1)

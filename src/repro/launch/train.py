@@ -110,9 +110,29 @@ def _pipeline_spec(args, cfg):
                              f"{args.bucket_bytes}")
 
     def _from_plan(plan):
+        if not args.no_verify_plan:
+            # static verification gate (DESIGN.md §15): cfg-full — the
+            # plan-shape / schedule-safety / collective-divergence
+            # passes plus memory bounds and kernel lint.  Errors refuse
+            # the plan before anything compiles; warnings print.
+            from ..analysis import analyze_plan, format_report, split
+            diags = analyze_plan(plan, cfg, seq_len=args.seq,
+                                 gbs_tokens=args.batch * args.seq,
+                                 microbatches=mb or None)
+            errs, warns = split(diags)
+            for d in warns:
+                print(f"plan verifier: WARNING {d.format()}")
+            if errs:
+                raise SystemExit(
+                    "plan fails static verification (DESIGN.md §15; "
+                    "--no-verify-plan to bypass):\n"
+                    + format_report(errs))
         try:
+            # verify=False: the gate above already ran (or the user
+            # bypassed it explicitly)
             spec = HP.from_plan(plan, microbatches=mb or None,
-                                execute_tp=True, execute_dp=True)
+                                execute_tp=True, execute_dp=True,
+                                verify=False)
             HP.validate_spec_tp(cfg, spec)
             # the plan's searched sync mode executes too (its
             # bucket_bytes already rode in through from_plan)
@@ -233,6 +253,12 @@ def _export_obs(args, cfg, spec, mesh, plan, stage_params, mask, toks,
     write_trace(os.path.join(run_dir, "trace_predicted.json"), predicted)
     write_trace(os.path.join(run_dir, "trace_executed.json"), executed)
     import json
+    if plan is not None:
+        # persist the executed plan so repro.obs.validate can fold the
+        # static plan lint into the run-dir check (DESIGN.md §15)
+        with open(os.path.join(run_dir, "plan.json"), "w",
+                  encoding="utf-8") as f:
+            json.dump(plan.to_dict(), f, indent=2)
     with open(os.path.join(run_dir, "align.json"), "w",
               encoding="utf-8") as f:
         json.dump(report, f, indent=2)
@@ -425,6 +451,10 @@ def main():
     ap.add_argument("--search", default=None, metavar="CHIP:N,...",
                     help="HeteroAuto-search the given chip cluster and "
                          "run the winning plan (e.g. A:2,B:2)")
+    ap.add_argument("--no-verify-plan", action="store_true",
+                    help="skip the static plan verifier (repro.analysis, "
+                         "DESIGN.md §15) that refuses --plan/--search "
+                         "plans with H2Exxx errors before compiling")
     ap.add_argument("--search-dp", default=None, metavar="N,...",
                     help="with --search: dp candidate degrees (comma "
                          "list, default 1; the winner's dp executes on "

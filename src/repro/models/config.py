@@ -86,6 +86,15 @@ class ModelConfig:
         return self.num_experts > 0
 
     @property
+    def block_kind(self) -> str:
+        """Transformer block kind the family instantiates — the dispatch
+        key ``models.model`` builds stacks from and the jax-free layers
+        (cost model, ``repro.analysis``) use to decide which runtimes /
+        kernels apply (manual tp shards dense blocks only)."""
+        return {"dense": "dense", "vlm": "dense", "moe": "moe",
+                "ssm": "ssm"}.get(self.family, "dense")
+
+    @property
     def q_dim(self) -> int:
         return self.num_heads * self.head_dim
 

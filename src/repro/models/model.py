@@ -21,8 +21,7 @@ PyTree = Any
 
 
 def _block_kind(cfg: ModelConfig) -> str:
-    return {"dense": "dense", "vlm": "dense", "moe": "moe",
-            "ssm": "ssm"}.get(cfg.family, "dense")
+    return cfg.block_kind
 
 
 def _hybrid_groups(cfg) -> Tuple[int, int]:

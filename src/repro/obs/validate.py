@@ -5,11 +5,15 @@
 Checks whatever observability artifacts a run directory holds —
 ``metrics.jsonl`` (schema'd meta line + metrics/histogram rows),
 ``trace_predicted.json`` / ``trace_executed.json`` (``validate_trace``
-conformance), ``align.json`` (tick counts must match) — and prints
-``OBS_SCHEMA_OK RUN_DIR`` or every error with exit 1.
-``--require-trace`` additionally fails when the trace/alignment trio is
-absent (the ``train.py --trace`` contract).  Deliberately importable
-and runnable without jax so CI can gate artifacts from any producer.
+conformance), ``align.json`` (tick counts must match; a missing
+``stragglers`` section warns rather than fails — older producers
+predate it), and ``plan.json`` (folded through the static plan
+verifier, ``repro.analysis`` — DESIGN.md §15) — and prints
+``OBS_SCHEMA_OK RUN_DIR`` or every error with exit 1.  Warnings print
+but keep exit 0.  ``--require-trace`` additionally fails when the
+trace/alignment trio is absent (the ``train.py --trace`` contract).
+Deliberately importable and runnable without jax so CI can gate
+artifacts from any producer.
 """
 from __future__ import annotations
 
@@ -17,7 +21,7 @@ import argparse
 import json
 import os
 import sys
-from typing import List
+from typing import List, Optional
 
 from .metrics import MET_SCHEMA_VERSION
 from .trace import validate_trace
@@ -68,9 +72,12 @@ def validate_metrics_lines(lines) -> List[str]:
     return errs
 
 
-def validate_run_dir(run_dir: str, *, require_trace: bool = False
-                     ) -> List[str]:
+def validate_run_dir(run_dir: str, *, require_trace: bool = False,
+                     warnings: Optional[List[str]] = None) -> List[str]:
+    """Returns the error list; non-fatal findings are appended to the
+    caller-supplied ``warnings`` list (ignored when None)."""
     errs: List[str] = []
+    warns = warnings if warnings is not None else []
     if not os.path.isdir(run_dir):
         return [f"not a directory: {run_dir}"]
 
@@ -114,8 +121,22 @@ def validate_run_dir(run_dir: str, *, require_trace: bool = False
                 exe.get("metadata", {}).get("ticks"):
             errs.append("align.json executed_ticks disagrees with "
                         "trace_executed.json metadata.ticks")
+        if "stragglers" not in align:
+            # producers before the straggler report omit the section;
+            # the alignment numbers above are still fully checkable
+            warns.append("align.json: no stragglers section (older "
+                         "producer?) — straggler attribution unchecked")
     elif require_trace:
         errs.append("align.json missing (--require-trace)")
+
+    plan = load("plan.json")
+    if plan is not None:
+        # fold the static plan verifier in (cfg-free passes; jax-free
+        # like the rest of this module — DESIGN.md §15)
+        from ..analysis import analyze_plan, split
+        perrs, pwarns = split(analyze_plan(plan))
+        errs.extend(f"plan.json: {d.format()}" for d in perrs)
+        warns.extend(f"plan.json: {d.format()}" for d in pwarns)
     return errs
 
 
@@ -126,8 +147,12 @@ def main(argv=None) -> int:
     ap.add_argument("--require-trace", action="store_true",
                     help="fail when the trace/alignment files are absent")
     args = ap.parse_args(argv)
+    warns: List[str] = []
     errs = validate_run_dir(args.run_dir,
-                            require_trace=args.require_trace)
+                            require_trace=args.require_trace,
+                            warnings=warns)
+    for w in warns:
+        print(f"WARNING: {w}")
     if errs:
         for e in errs:
             print(f"ERROR: {e}", file=sys.stderr)

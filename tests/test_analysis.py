@@ -1,0 +1,403 @@
+"""Static plan verifier (ISSUE 10 tentpole — DESIGN.md §15): the
+analyzer passes, the negative fixtures mapped to their H2Exxx codes,
+the registry-wide clean sweep, the ``from_plan`` / ``train.py`` gates,
+and the repo AST lint."""
+import dataclasses
+import glob
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (CODES, PlanVerificationError, analyze_plan,
+                            check_attention, check_convergence,
+                            check_domain_divergence, check_group_tables,
+                            check_kernels, check_pad_inertness,
+                            check_streamable, check_tp,
+                            replica_collective_trace, split, verify_plan,
+                            verify_schedule)
+from repro.configs import get_config, get_smoke_config
+from repro.core.cost_model import ParallelPlan
+from repro.core.schedules import available_schedules, get_schedule
+from repro.core.schedules.base import Op, Schedule
+from repro.core.tickprogram import (TickTables, group_layout,
+                                    spmd_tick_tables)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tests", "fixtures")
+BAD = os.path.join(FIXTURES, "bad")
+GRID = [(2, 2), (2, 8), (3, 6), (4, 8), (4, 16), (5, 10), (6, 12),
+        (8, 16)]
+
+
+def _codes(diags):
+    return sorted({d.code for d in diags})
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics vocabulary
+# ---------------------------------------------------------------------------
+
+def test_code_registry_well_formed():
+    for code in CODES:
+        assert re.fullmatch(r"H2[EW]\d{3}", code), code
+    # the pass families named in DESIGN.md §15 all exist
+    for required in ("H2E101", "H2E201", "H2E205", "H2E301", "H2E302",
+                     "H2E303", "H2E304", "H2E305", "H2E401", "H2E501",
+                     "H2E502", "H2E503", "H2E504", "H2W201", "H2W401"):
+        assert required in CODES, required
+
+
+def test_unregistered_code_rejected():
+    from repro.analysis import error
+    with pytest.raises(AssertionError):
+        error("H2E999", "no such code")
+
+
+# ---------------------------------------------------------------------------
+# registry-wide clean sweep (the conformance harness's invariants as
+# analyzer passes — every registered schedule must come back empty)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", available_schedules())
+def test_registry_schedules_clean(name):
+    sched = get_schedule(name)
+    pts = [(S, b) for S, b in GRID if sched.supports(S, b)]
+    assert pts, name
+    for S, b in pts:
+        diags = verify_schedule(sched, S, b)
+        assert diags == [], (name, S, b, [d.format() for d in diags])
+
+
+def test_schedule_verify_method():
+    assert get_schedule("1f1b").verify(2, 4) == []
+
+
+# ---------------------------------------------------------------------------
+# fixture plans: every shipped plan lints clean, the seeded bad plans
+# refuse with their specific codes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", sorted(glob.glob(
+    os.path.join(FIXTURES, "*.json"))))
+def test_fixture_plans_clean(path):
+    errs, _ = split(analyze_plan(_load(path)))
+    assert errs == [], [d.format() for d in errs]
+    errs, _ = split(analyze_plan(_load(path), get_smoke_config(
+        "granite_8b"), seq_len=32))
+    assert errs == [], [d.format() for d in errs]
+
+
+def test_divergent_domain_plan_refused():
+    """dp=2 with batch_domain [4, 3] under ``interleaved``: the pacing
+    allocation streams but replica 1's cannot (b % S != 0), so the
+    replicas could never issue convergent collective sequences."""
+    diags = analyze_plan(_load(os.path.join(BAD, "plan_divergent.json")))
+    errs, _ = split(diags)
+    assert "H2E303" in _codes(errs), [d.format() for d in errs]
+
+
+def test_overhbm_plan_refused():
+    """Full granite-8b (36 layers + optimizer state) on one 16 GiB v5e:
+    the memory pass must refuse with H2E401."""
+    plan = _load(os.path.join(BAD, "plan_overhbm.json"))
+    errs, _ = split(analyze_plan(plan, get_config("granite_8b"),
+                                 seq_len=4096))
+    assert _codes(errs) == ["H2E401"], [d.format() for d in errs]
+    # cfg-free the same plan is fine — memory needs the model
+    errs, _ = split(analyze_plan(plan))
+    assert errs == []
+
+
+# ---------------------------------------------------------------------------
+# collective divergence on hand-built programs
+# ---------------------------------------------------------------------------
+
+def test_mismatched_collective_order_H2E302():
+    tables = spmd_tick_tables("1f1b", 2, 2)
+    a = replica_collective_trace(tables, num_stages=2,
+                                 routing=(True, False, False, False))
+    b = replica_collective_trace(tables, num_stages=2,
+                                 routing=(True, False, True, False))
+    assert len(a) == len(b) and a != b
+    diags = check_convergence([a, b])
+    assert _codes(diags) == ["H2E302"]
+    assert check_convergence([a, a]) == []
+
+
+def test_trace_length_mismatch_H2E301():
+    t2 = spmd_tick_tables("1f1b", 2, 2)
+    t4 = spmd_tick_tables("1f1b", 2, 4)
+    a = replica_collective_trace(t2, num_stages=2)
+    b = replica_collective_trace(t4, num_stages=2)
+    diags = check_convergence([a, b])
+    assert _codes(diags) == ["H2E301"]
+
+
+def test_domain_divergence_underivable_H2E303():
+    diags = check_domain_divergence("interleaved", 2, [4, 3])
+    assert _codes(diags) == ["H2E303"]
+    # a derivable non-uniform domain converges (the PR 8 runtime case)
+    assert check_domain_divergence("1f1b", 2, [4, 2], tp=2,
+                                   dp_sync="psum") == []
+
+
+def test_pad_inertness_H2E304():
+    t = spmd_tick_tables("1f1b", 2, 2)
+    active = t.active.copy()
+    # kill microbatch 0's stage-0 forward: stage 1 still consumes its
+    # output on the next tick
+    active[0, 0] = False
+    broken = TickTables(t.ticks, t.mb, t.chunk, t.src, active, t.emit)
+    diags = check_pad_inertness(broken)
+    assert _codes(diags) == ["H2E304"]
+    assert check_pad_inertness(t) == []
+
+
+def test_grouped_tables_H2E305():
+    layout = group_layout((2, 4))
+    assert check_group_tables(layout, ("sr_ag",), 256) == []
+    assert check_group_tables(layout, ("naive",), 256) == []
+    # corrupt the membership matrix: device 0 claims stage 1's span too
+    member = layout.member.copy()
+    member[0, :] = True
+    bad = dataclasses.replace(layout, member=member)
+    diags = check_group_tables(bad, ("sr_ag",), 256)
+    assert _codes(diags) == ["H2E305"]
+    # wrong boundary count
+    diags = check_group_tables(layout, ("sr_ag", "naive"), 256)
+    assert _codes(diags) == ["H2E305"]
+
+
+# ---------------------------------------------------------------------------
+# schedule safety on a hostile schedule
+# ---------------------------------------------------------------------------
+
+class _NonStreamable(Schedule):
+    """Stage 1 consumes microbatches in the OPPOSITE order from stage 0
+    — coverage holds but no tight tick-synchronous stream exists."""
+    name = "non_streamable_test"
+
+    def ops(self, S, b):
+        rows = []
+        for s in range(S):
+            mbs = range(b) if s == 0 else reversed(range(b))
+            row = [Op("F", m) for m in mbs]
+            row += [Op("B", m) for m in reversed(range(b))]
+            rows.append(row)
+        return rows
+
+    def alpha(self, S=None, b=None):
+        return 1.0
+
+
+def test_non_streamable_op_list_H2E205():
+    diags = check_streamable(_NonStreamable(), 2, 2)
+    assert _codes(diags) == ["H2E205"]
+
+
+# ---------------------------------------------------------------------------
+# kernel lint
+# ---------------------------------------------------------------------------
+
+def test_page_size_violation_H2E503():
+    cfg = get_smoke_config("granite_8b")
+    diags = check_kernels(cfg, seq_len=32, page_size=100)
+    assert "H2E503" in _codes(diags), [d.format() for d in diags]
+    assert "H2E503" not in _codes(check_kernels(cfg, seq_len=32,
+                                                page_size=128))
+
+
+def test_gqa_non_integral_H2E502():
+    cfg = dataclasses.replace(get_smoke_config("granite_8b"),
+                              num_heads=6, num_kv_heads=4)
+    diags = check_attention(cfg)
+    assert "H2E502" in _codes(diags)
+
+
+def test_tp_divisibility_H2E501():
+    cfg = get_smoke_config("granite_8b")      # 2 heads
+    assert "H2E501" in _codes(check_tp(cfg, [3]))
+    assert check_tp(cfg, [1, 2]) == []
+
+
+def test_tp_on_non_dense_family_H2E504():
+    cfg = get_smoke_config("mamba2_780m")
+    diags = check_tp(cfg, [2])
+    assert _codes(diags) == ["H2E504"]
+
+
+# ---------------------------------------------------------------------------
+# the gates: from_plan and verify_plan
+# ---------------------------------------------------------------------------
+
+def _divergent_plan():
+    return ParallelPlan.from_dict(
+        _load(os.path.join(BAD, "plan_divergent.json")))
+
+
+def test_verify_plan_raises_with_diagnostics():
+    with pytest.raises(PlanVerificationError) as ei:
+        verify_plan(_divergent_plan())
+    assert isinstance(ei.value, ValueError)   # legacy handlers catch it
+    assert "H2E303" in str(ei.value)
+    assert any(d.code == "H2E303" for d in ei.value.diagnostics)
+
+
+def test_from_plan_gate_in_process():
+    """``from_plan`` refuses the divergent plan at load time; the
+    legacy execute_dp=False path (domain stays a cost dimension) and
+    the explicit verify=False escape still build the spec."""
+    from repro.core import heteropp as HP
+    plan = _divergent_plan()
+    with pytest.raises(PlanVerificationError):
+        HP.from_plan(plan, execute_tp=True, execute_dp=True)
+    spec = HP.from_plan(plan)                 # dp not executed: clean
+    assert spec.num_stages == 2
+    spec = HP.from_plan(plan, execute_tp=True, execute_dp=True,
+                        verify=False)
+    assert spec.batch_domain == (4, 3)
+
+
+def test_analyze_plan_parse_failure_H2E101():
+    errs, _ = split(analyze_plan({"dp": 1}))
+    assert _codes(errs) == ["H2E101"]
+    errs, _ = split(analyze_plan(dict(_load(os.path.join(
+        FIXTURES, "plan_exp_c1_8dev.json")), schedule="nope")))
+    assert _codes(errs) == ["H2E101"]
+
+
+# ---------------------------------------------------------------------------
+# CLIs: the plan lint (jax-free) and the repo AST lint
+# ---------------------------------------------------------------------------
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + \
+        env.get("PYTHONPATH", "")
+    return env
+
+
+def test_lint_cli_jax_free():
+    """``python -m repro.analysis.lint`` works with jax hard-blocked:
+    clean fixture exits 0, the bad fixtures exit 1 with their codes."""
+    good = os.path.join(FIXTURES, "plan_exp_c1_8dev.json")
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; sys.modules['jax'] = None; "
+         "from repro.analysis.lint import main; "
+         f"sys.exit(main([{good!r}, '--schedules']))"],
+        capture_output=True, text=True, timeout=300, env=_env(),
+        cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PLAN_LINT_OK" in r.stdout and "SCHEDULE_REGISTRY_OK" \
+        in r.stdout
+
+    bad = os.path.join(BAD, "plan_divergent.json")
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; sys.modules['jax'] = None; "
+         "from repro.analysis.lint import main; "
+         f"sys.exit(main([{bad!r}]))"],
+        capture_output=True, text=True, timeout=300, env=_env(),
+        cwd=ROOT)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "H2E303" in r.stderr
+
+
+def test_repo_ast_lint(tmp_path):
+    r = subprocess.run([sys.executable, "tools/lint_repro.py"],
+                       capture_output=True, text=True, timeout=120,
+                       cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "REPO_LINT_OK" in r.stdout
+    bad = tmp_path / "offender.py"
+    # split so this file's own literal doesn't trip the lint
+    needle = "--xla_force_host" + "_platform_device_count=8"
+    bad.write_text("from jax.experimental.shard_map import shard_map\n"
+                   "import os\n"
+                   f"os.environ['XLA_FLAGS'] = '{needle}'\n")
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "lint_repro.py"),
+                        str(bad)],
+                       capture_output=True, text=True, timeout=120,
+                       cwd=ROOT)
+    assert r.returncode == 1
+    assert "shard_map" in r.stderr and "hostdevices" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# obs validator: stragglers warning + plan lint fold-in
+# ---------------------------------------------------------------------------
+
+def test_obs_validate_stragglers_warning_and_plan_lint(tmp_path):
+    from repro.obs.metrics import MET_SCHEMA_VERSION
+    from repro.obs.validate import validate_run_dir
+    run = tmp_path / "run"
+    run.mkdir()
+    (run / "metrics.jsonl").write_text(
+        json.dumps({"kind": "meta", "ts": 0.0,
+                    "schema_version": MET_SCHEMA_VERSION}) + "\n"
+        + json.dumps({"kind": "metrics", "ts": 1.0, "loss": 2.0}) + "\n")
+    (run / "align.json").write_text(json.dumps(
+        {"ticks_match": True, "priced_ticks": 5, "executed_ticks": 5}))
+    warns = []
+    errs = validate_run_dir(str(run), warnings=warns)
+    assert errs == []
+    assert any("stragglers" in w for w in warns), warns
+
+    # a plan.json in the run dir is folded through the plan verifier
+    with open(os.path.join(BAD, "plan_divergent.json")) as f:
+        (run / "plan.json").write_text(f.read())
+    errs = validate_run_dir(str(run))
+    assert any("H2E303" in e for e in errs), errs
+
+
+# ---------------------------------------------------------------------------
+# train.py gate e2e (subprocess; cheap — refusal fires before compiling)
+# ---------------------------------------------------------------------------
+
+def _train(*args, timeout=300):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *args],
+        capture_output=True, text=True, timeout=timeout, env=_env(),
+        cwd=ROOT)
+
+
+@pytest.mark.e2e
+def test_train_refuses_divergent_plan():
+    r = _train("--arch", "granite_8b", "--smoke", "--plan",
+               os.path.join(BAD, "plan_divergent.json"),
+               "--steps", "1", "--batch", "8", "--seq", "32")
+    assert r.returncode != 0
+    assert "H2E303" in (r.stdout + r.stderr)
+
+
+@pytest.mark.e2e
+def test_train_refuses_overhbm_plan():
+    r = _train("--arch", "granite_8b", "--plan",
+               os.path.join(BAD, "plan_overhbm.json"),
+               "--steps", "1", "--batch", "8", "--seq", "4096")
+    assert r.returncode != 0
+    assert "H2E401" in (r.stdout + r.stderr)
+
+
+@pytest.mark.e2e
+def test_train_no_verify_plan_bypasses_gate():
+    """--no-verify-plan skips the verifier: the divergent plan gets
+    past the gate (no H2E code in the output) and only dies later at
+    the device-count check."""
+    r = _train("--arch", "granite_8b", "--smoke", "--plan",
+               os.path.join(BAD, "plan_divergent.json"),
+               "--no-verify-plan",
+               "--steps", "1", "--batch", "8", "--seq", "32")
+    assert r.returncode != 0
+    assert "H2E" not in (r.stdout + r.stderr), r.stdout + r.stderr

@@ -1,27 +1,35 @@
-"""Schedule-conformance harness (ISSUE 3): every schedule in the
-registry — including ones future PRs add — is checked on a grid of
-(S, b) points for the op-list invariants the rest of the system builds
-on (DESIGN.md §3, §7):
+"""Schedule-conformance harness (ISSUE 3, promoted to analyzer passes
+in ISSUE 10): every schedule in the registry — including ones future
+PRs add — is checked on a grid of (S, b) points for the op-list
+invariants the rest of the system builds on (DESIGN.md §3, §7, §15):
 
 * coverage     — each microbatch's F, and B (or D and W for backward-
                  split schedules), appears EXACTLY once per chunk per
-                 stage;
+                 stage (H2E201);
 * placement    — global_stage/device_of are inverse bijections and every
-                 op runs on the device its placement names;
+                 op runs on the device its placement names (H2E202);
 * dependencies — an independent causal replay (not the production
-                 simulator) completes without deadlock: F(m, g) only
-                 after F(m, g−1), D/B(m, g) only after its own F and the
-                 downstream D/B, W(m, g) only after its own D;
+                 simulator) completes without deadlock (H2E203);
 * memory       — the stash profile walked from the op lists never
-                 exceeds the schedule's closed-form ``inflight``;
+                 exceeds the schedule's closed-form ``inflight``
+                 (H2E204);
 * α            — the closed-form ``alpha`` matches the simulator-derived
-                 value within tolerance.
+                 value within tolerance (H2W201).
 
-New schedules registered in ``repro.core.schedules`` get all of this for
-free — the parametrization reads the registry at collection time.
+The invariant algorithms now LIVE in ``repro.analysis.schedule_safety``
+— the same passes the ``from_plan`` load-time gate runs — so this
+harness asserts the analyzer returns no diagnostics rather than
+re-implementing the walks.  New schedules registered in
+``repro.core.schedules`` get all of this for free — the parametrization
+reads the registry at collection time.
 """
 import pytest
 
+from repro.analysis.schedule_safety import (check_alpha,
+                                            check_causal_replay,
+                                            check_coverage,
+                                            check_inflight,
+                                            check_placement)
 from repro.core.schedules import available_schedules, get_schedule
 
 GRID = [(2, 2), (2, 8), (3, 6), (4, 8), (4, 16), (5, 10), (6, 12),
@@ -34,102 +42,40 @@ def _grid(sched):
     return pts
 
 
+def _clean(diags):
+    assert diags == [], [d.format() for d in diags]
+
+
 @pytest.mark.parametrize("name", available_schedules())
 def test_op_coverage(name):
     sched = get_schedule(name)
-    v = sched.n_chunks
-    kinds = ("F", "D", "W") if sched.splits_backward else ("F", "B")
     for S, b in _grid(sched):
-        want = sorted((m, k) for m in range(b) for k in range(v))
-        for s, row in enumerate(sched.ops(S, b)):
-            seen = {k: [] for k in kinds}
-            for op in row:
-                assert op.kind in kinds, (name, S, b, s, op)
-                seen[op.kind].append((op.mb, op.chunk))
-            for kind in kinds:
-                assert sorted(seen[kind]) == want, (name, S, b, s, kind)
+        _clean(check_coverage(sched, S, b))
 
 
 @pytest.mark.parametrize("name", available_schedules())
 def test_placement_bijection(name):
     sched = get_schedule(name)
-    v = sched.n_chunks
     for S, _ in _grid(sched):
-        gs = [sched.global_stage(s, k, S) for s in range(S)
-              for k in range(v)]
-        assert sorted(gs) == list(range(S * v)), (name, S)
-        for s in range(S):
-            slots = [sched.global_stage(s, k, S) for k in range(v)]
-            # required invariant: strictly increasing in the chunk slot
-            assert slots == sorted(slots) and len(set(slots)) == v, \
-                (name, S, s)
-            for k in range(v):
-                assert sched.device_of(slots[k], S) == s, (name, S, s, k)
+        _clean(check_placement(sched, S))
 
 
 @pytest.mark.parametrize("name", available_schedules())
 def test_dependencies_respect_topology(name):
-    """Independent causal replay: per-stage in-order execution with the
-    cross-stage dependency rules must complete.  A deadlock here means
-    the op order contradicts the stage topology / chunk placement."""
     sched = get_schedule(name)
     for S, b in _grid(sched):
-        G = S * sched.n_chunks
-        ops = sched.ops(S, b)
-        idx = [0] * S
-        f_done, d_done = set(), set()
-        while any(i < len(row) for i, row in zip(idx, ops)):
-            progressed = False
-            for s in range(S):
-                while idx[s] < len(ops[s]):
-                    op = ops[s][idx[s]]
-                    g = sched.global_stage(s, op.chunk, S)
-                    assert sched.device_of(g, S) == s, (name, S, b, s, op)
-                    if op.kind == "F":
-                        ready = g == 0 or (op.mb, g - 1) in f_done
-                        done = f_done
-                    elif op.kind in ("B", "D"):
-                        ready = (op.mb, g) in f_done and \
-                            (g == G - 1 or (op.mb, g + 1) in d_done)
-                        done = d_done
-                    else:                                   # W
-                        ready = (op.mb, g) in d_done
-                        done = None
-                    if not ready:
-                        break
-                    if done is not None:
-                        done.add((op.mb, g))
-                    idx[s] += 1
-                    progressed = True
-            assert progressed, \
-                f"deadlock: {name} S={S} b={b} at {[i for i in idx]}"
+        _clean(check_causal_replay(sched, S, b))
 
 
 @pytest.mark.parametrize("name", available_schedules())
 def test_inflight_never_exceeds_closed_form(name):
-    """Walk the op lists counting stashed activation sets (+1/v at F,
-    −1/v at the freeing B or W): the peak must never exceed the closed
-    form the cost model's memory-feasibility check trusts."""
     sched = get_schedule(name)
-    free_at = "W" if sched.splits_backward else "B"
-    unit = 1.0 / sched.n_chunks
     for S, b in _grid(sched):
-        for s, row in enumerate(sched.ops(S, b)):
-            held = peak = 0.0
-            for op in row:
-                if op.kind == "F":
-                    held += unit
-                    peak = max(peak, held)
-                elif op.kind == free_at:
-                    held -= unit
-            assert held == pytest.approx(0.0), (name, S, b, s)
-            assert peak <= sched.inflight(S, b, s) + 1e-9, \
-                (name, S, b, s, peak, sched.inflight(S, b, s))
+        _clean(check_inflight(sched, S, b))
 
 
 @pytest.mark.parametrize("name", available_schedules())
 def test_alpha_matches_simulator(name):
     sched = get_schedule(name)
     for S, b in _grid(sched):
-        assert sched.alpha(S, b) == pytest.approx(
-            sched.derived_alpha(S, b), abs=1e-6), (name, S, b)
+        _clean(check_alpha(sched, S, b))
